@@ -1,0 +1,113 @@
+"""Shared benchmark utilities: LLM-statistics synthetic tensors, a tiny
+really-trained LM (cached), timing, CSV output.
+
+Offline substitution for the paper's Llama/Qwen checkpoints (DESIGN.md §10.1):
+  * weights  ~ Student-t(df=5) * 0.02  -- heavy-ish tails, tame dynamic range
+               (matches the LLM-weight statistics motivating Table 1)
+  * acts     ~ N(0,1) with ~0.1% channels scaled 30-2000x (LLM.int8 outliers,
+               motivating Table 2's exponent sensitivity)
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def weight_like(shape, seed=0, df=5.0):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_t(df, size=shape) * 0.02
+    return jnp.asarray(w.astype(np.float32))
+
+
+def act_like(shape, seed=0, outlier_frac=0.001, outlier_scale=100.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32)
+    cols = rng.random(shape[-1]) < outlier_frac
+    x[..., cols] *= outlier_scale
+    return jnp.asarray(x)
+
+
+def rel_mse(x, xhat):
+    x = np.asarray(x, np.float64)
+    xhat = np.asarray(xhat, np.float64)
+    return float(np.mean((x - xhat) ** 2) / (np.mean(x**2) + 1e-30))
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time (us) of a jitted callable."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(rows, header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    print()
+
+
+# ---------------------------------------------------------------------------
+# tiny really-trained LM (cached across benchmark runs)
+# ---------------------------------------------------------------------------
+def trained_tiny_lm(steps: int = 60, force: bool = False):
+    """Train (or load) a small llama-family LM on the synthetic stream.
+    Returns (params, cfg, eval_batches)."""
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+    from repro.train.data import DataConfig, SyntheticLM
+    from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+    cfg = get_config("llama3_2_3b").reduced()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8, branching=4)
+    ds = SyntheticLM(dcfg)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    ckpt_dir = os.path.join(RESULTS_DIR, "tiny_lm_ckpt")
+    if not force and latest_step(ckpt_dir) is not None:
+        params, _ = restore_checkpoint(ckpt_dir, params)
+    else:
+        opt = init_opt_state(params)
+        ocfg = AdamWConfig(lr=1e-2, warmup_steps=5, total_steps=2 * steps, weight_decay=0.0)
+
+        @jax.jit
+        def step(params, opt, tokens, labels):
+            (loss, _), g = jax.value_and_grad(
+                lambda p: tf.lm_loss(p, {"tokens": tokens, "labels": labels}, cfg), has_aux=True
+            )(params)
+            params, opt, _ = adamw_update(params, g, opt, ocfg)
+            return params, opt, loss
+
+        for i in range(steps):
+            b = ds.batch(i)
+            params, opt, loss = step(params, opt, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"]))
+        save_checkpoint(ckpt_dir, steps, params)
+    eval_batches = [ds.batch(10_000 + i) for i in range(4)]
+    return params, cfg, eval_batches
+
+
+def eval_loss(params, cfg, batches, quant=None) -> float:
+    from repro.core.qlinear import QuantConfig
+    from repro.models import transformer as tf
+
+    quant = quant or QuantConfig(mode="bf16")
+    tot = 0.0
+    for b in batches:
+        loss, m = tf.lm_loss(
+            params, {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])},
+            cfg, quant,
+        )
+        tot += float(m["xent"])
+    return tot / len(batches)

@@ -1,0 +1,143 @@
+"""Kernel benchmarks (paper Tables 16-18, Fig. 5, App. E analogue).
+
+Two views, because this container is CPU-only:
+  1. *Roofline model* (authoritative for the TPU target): HBM bytes moved per
+     GEMM by the packed RaZeR kernel vs a bf16 weight GEMM.  Decode GEMMs are
+     memory-bound, so bytes-ratio == expected speedup; this reproduces the
+     paper's memory-bound speedup structure (their 3-4x vs FP16 at batch 1).
+  2. *Wall time* (indicative only): jit'd jnp reference dequant-GEMM vs bf16
+     GEMM on CPU.
+
+Also sweeps kernel block shapes (the §4.3/App. E auto-tuning analogue) in
+interpret mode for correctness across the lattice + reports the VMEM working
+set per candidate, which is the TPU selection criterion.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import pack_weight
+from repro.kernels import ops, ref
+from repro.launch.costmodel import HBM_BW, PEAK_FLOPS
+
+from .common import time_fn, weight_like
+
+# (layer, K, N) from the paper's microbenchmarks (Llama-3.1-8B / Qwen3-32B)
+PAPER_SHAPES = [
+    ("llama31_8b/attn.qkv", 4096, 6144),
+    ("llama31_8b/attn.o", 4096, 4096),
+    ("llama31_8b/mlp.gateup", 4096, 28672),
+    ("llama31_8b/mlp.down", 14336, 4096),
+    ("qwen3_32b/attn.qkv", 5120, 10240),
+    ("qwen3_32b/mlp.gateup", 5120, 51200),
+]
+
+
+def razer_gemm_bytes(m: int, k: int, n: int) -> float:
+    """HBM bytes: packed codes + scale/meta + activations + output."""
+    return k * n / 2 + k * n / 16 + m * k * 2 + m * n * 2
+
+
+def bf16_gemm_bytes(m: int, k: int, n: int) -> float:
+    return k * n * 2 + m * k * 2 + m * n * 2
+
+
+def table16_roofline() -> List:
+    rows = []
+    for name, k, n in PAPER_SHAPES:
+        for m in (1, 16, 128):
+            rb = razer_gemm_bytes(m, k, n)
+            bb = bf16_gemm_bytes(m, k, n)
+            t_mem = rb / HBM_BW
+            t_cmp = 2 * m * k * n / PEAK_FLOPS
+            bound = "mem" if t_mem > t_cmp else "compute"
+            rows.append((
+                f"table16/{name}_M{m}", round(max(t_mem, t_cmp) * 1e6, 3),
+                f"speedup_vs_bf16={bb / rb:.2f}x bound={bound}",
+            ))
+    return rows
+
+
+def table16_walltime(small: bool = True) -> List:
+    """CPU wall time of the jnp reference path (indicative)."""
+    rows = []
+    shapes = [(64, 1024, 1024), (8, 2048, 2048)] if small else [(1, k, n) for _, k, n in PAPER_SHAPES]
+    for m, k, n in shapes:
+        w = weight_like((k, n), seed=k % 97)
+        x = weight_like((m, k), seed=m)
+        pw = pack_weight(w)
+        f_bf16 = jax.jit(lambda a, b: a @ b)
+        t_base = time_fn(f_bf16, x, w.astype(jnp.bfloat16))
+        f_packed = jax.jit(lambda a, p=pw: ops.razer_matmul(a, p))
+        t_packed = time_fn(f_packed, x)
+        rows.append((f"table16wall/m{m}_k{k}_n{n}", round(t_packed, 1),
+                     f"bf16_us={t_base:.1f} ratio={t_packed / t_base:.2f} (CPU-indicative)"))
+    return rows
+
+
+def appE_block_autotune() -> List:
+    """App. E analogue: sweep kernel block shapes; report VMEM working set and
+    verify correctness in interpret mode.  On TPU the selector picks the
+    largest-compute-density candidate that fits VMEM (16 MiB/core)."""
+    from repro.kernels.razer_matmul import razer_matmul_pallas
+
+    k, n, m = 512, 256, 64
+    w = weight_like((k, n), seed=3)
+    x = weight_like((m, k), seed=4)
+    pw = pack_weight(w)
+    want = ref.razer_matmul_ref(x, pw)
+    rows = []
+    for bm, bn, bk in [(8, 128, 128), (16, 128, 256), (32, 256, 256), (64, 128, 512), (64, 256, 512)]:
+        if m % bm or n % bn or k % bk:
+            continue
+        vmem = (bm * bk * 2 + bk * bn // 2 + bk * bn // 16 + bk * bn * 2 + bm * bn * 4)
+        t0 = time.perf_counter()
+        y = razer_matmul_pallas(x, pw.codes, pw.scale_meta, m0=5.0, m1=8.0,
+                                block_m=bm, block_n=bn, block_k=bk,
+                                compute_dtype=jnp.float32, interpret=True) * pw.tensor_scale
+        us = (time.perf_counter() - t0) * 1e6
+        ok = bool(jnp.allclose(y, want, atol=1e-4, rtol=1e-4))
+        rows.append((f"appE/bm{bm}_bn{bn}_bk{bk}", round(us, 1),
+                     f"vmem_kib={vmem // 1024} correct={ok}"))
+    return rows
+
+
+def fig7_two_pass_model() -> List:
+    """App. D.3 two-pass W4A4 cost model: D = A*B_main + A*B_comp.
+
+    On hardware without a native remap datapath, RaZeR W4A4 costs two NVFP4
+    GEMM passes; B_comp is sparse (nonzero only at remapped -0 slots).  We
+    measure the actual remap density on RaZeR-quantized weights and derive the
+    throughput fraction vs one-pass NVFP4 (paper: >2x over FP16, below native
+    NVFP4) and vs the dense-2x upper bound."""
+    rows = []
+    for seed in (0, 1):
+        w = weight_like((1024, 1024), seed=seed)
+        from repro.core.razer import razer_quantize
+        from repro.core.twopass import two_pass_matmul
+
+        bq = razer_quantize(w, axis=0)
+        frac_sv_blocks = float(np.mean(np.asarray(bq.sv_index) >= 0))
+        # exact two-pass realization: D = A@B_main + A@B_comp must equal the
+        # single-pass RaZeR GEMM bit-for-bit (App. D.3)
+        x = weight_like((64, 1024), seed=seed + 100)
+        y2, density = two_pass_matmul(x, w)
+        y1 = x @ bq.dequantize()
+        exact = bool(jnp.allclose(y2, y1, rtol=1e-5, atol=1e-5))
+        density = float(density)
+        # two dense passes = 0.5x native NVFP4; exploiting B_comp sparsity
+        # bounds it by (1 + density)^-1
+        rows.append((
+            f"fig7/two_pass_seed{seed}", 0.0,
+            f"exact={exact} sv_block_frac={frac_sv_blocks:.3f} comp_density={density:.4f} "
+            f"thpt_vs_nvfp4=0.50x(dense) {1 / (1 + density):.2f}x(sparse-exploited)",
+        ))
+    rows.append(("fig7/fp16_baseline", 0.0,
+                 "two-pass NVFP4 @ 4.5bit vs FP16: mem-bound speedup 16/4.5=3.56x, "
+                 "2 passes => ~1.78x compute-bound floor (paper metes >2x)"))
+    return rows

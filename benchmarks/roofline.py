@@ -1,0 +1,37 @@
+"""Roofline table: reads results/dryrun.json (deliverable (g) view)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from .common import RESULTS_DIR
+
+
+def roofline_rows(path: str = None) -> List:
+    path = path or os.path.join(RESULTS_DIR, "dryrun.json")
+    if not os.path.exists(path):
+        return [("roofline/missing", 0.0, f"run `python -m repro.launch.dryrun --all` first ({path})")]
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if "error" in r:
+            rows.append((name, 0.0, f"ERROR {r['error'][:80]}"))
+            continue
+        if "roofline" not in r:
+            mem = r["memory"]
+            rows.append((name, 0.0,
+                         f"compile_ok args_gb={mem['argument_bytes'] / 1e9:.2f} "
+                         f"temp_gb={mem['temp_bytes'] / 1e9:.2f}"))
+            continue
+        t = r["roofline"]
+        rows.append((
+            name,
+            round(max(t.values()) * 1e6, 1),
+            f"compute_s={t['compute_s']:.3e} memory_s={t['memory_s']:.3e} "
+            f"collective_s={t['collective_s']:.3e} dominant={r['dominant']} "
+            f"useful_ratio={r.get('useful_ratio') and round(r['useful_ratio'], 3)}",
+        ))
+    return rows

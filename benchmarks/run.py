@@ -1,0 +1,58 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV blocks.
+
+    PYTHONPATH=src python -m benchmarks.run [--only PREFIX] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run only benchmarks whose name contains this")
+    ap.add_argument("--fast", action="store_true", help="skip the slow trained-LM benches")
+    args = ap.parse_args(argv)
+
+    from . import kernel_bench, kv_quant, roofline, tables
+    from .common import emit
+
+    benches = [
+        ("table1", tables.table1_scale_formats_weights),
+        ("table2", tables.table2_scale_formats_acts),
+        ("fig3", tables.fig3_special_value_sweep),
+        ("table3_mse", tables.table3_method_comparison_mse),
+        ("table3_ppl", tables.table3_trained_lm_ppl),
+        ("table3_gptq", tables.gptq_row),
+        ("table4_accuracy", tables.table4_task_accuracy),
+        ("table6", tables.table6_wa_ablation),
+        ("table7", tables.table7_block_size),
+        ("table8", tables.table8_awq_combo),
+        ("table16_roofline", kernel_bench.table16_roofline),
+        ("table16_walltime", kernel_bench.table16_walltime),
+        ("appE_autotune", kernel_bench.appE_block_autotune),
+        ("fig7_two_pass", kernel_bench.fig7_two_pass_model),
+        ("appC1_kv", kv_quant.appC1_kv_quant),
+        ("roofline", roofline.roofline_rows),
+    ]
+    slow = {"table3_ppl", "table4_accuracy", "table6", "appC1_kv"}
+    failures = 0
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        if args.fast and name in slow:
+            continue
+        print(f"# === {name} ===")
+        try:
+            emit(fn())
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Special-value calibration example (paper §4.2, Fig. 3, App. B.2):
+sweep SV pairs on weight tensors, pick the model's 4-value weight set, and
+calibrate the activation pair on a calibration stream.
+
+    PYTHONPATH=src python examples/calibrate_special_values.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.calibration import (
+    calibrate_activation_sv,
+    select_weight_sv_pairs,
+    sv_pair_sweep,
+)
+from repro.models import transformer as tf
+from repro.train.data import DataConfig, SyntheticLM
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # Fig. 3: the parabola over SV magnitudes on an LLM-statistics tensor
+    w = jnp.asarray((rng.standard_t(5, size=(2048, 512)) * 0.02).astype(np.float32))
+    sweep = sv_pair_sweep(w)
+    print("Fig.3 sweep (normalized error vs NVFP4; < 1.0 = better):")
+    for m, e in sorted(sweep.items()):
+        bar = "#" * int((1.05 - e) * 200)
+        print(f"  +-{m:<4}: {e:.4f} {bar}")
+    print(f"  argmin at +-{min(sweep, key=sweep.get)} (paper: +-5)\n")
+
+    # App. B.2: two weight pairs for a real (reduced) model's weights
+    cfg = get_config("qwen3_8b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    wq = params["layers_0"]["mixer"]["wq"][0]
+    m0, m1 = select_weight_sv_pairs(wq)
+    print(f"qwen3 (reduced) layer-0 wq: weight SV set = +-{m0}, +-{m1} (paper Table 12 style)")
+
+    # activation pair on a calibration stream (paper uses Pile; we use the
+    # synthetic stream's embeddings)
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=2))
+    acts = []
+    for i in range(3):
+        b = ds.batch(i)
+        x, _ = tf.forward_hidden(params, jnp.asarray(b["tokens"]), cfg)
+        acts.append(np.asarray(x.astype(jnp.float32)).reshape(-1, cfg.d_model))
+    best = calibrate_activation_sv(acts, magnitudes=(3.5, 4.5, 5.0, 5.5, 6.5, 7.5))
+    print(f"activation SV pair from calibration: +-{best} (paper: +-5)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""repro.core -- the paper's contribution: NVFP4 + RaZeR numerics."""
+from .baselines import fouroversix_quantize, int4_quantize, mxfp4_quantize, nf4_quantize
+from .calibration import calibrate_activation_sv, select_weight_sv_pairs, sv_pair_sweep
+from .formats import (
+    FP4_MAX,
+    FP4_NEG_ZERO_CODE,
+    FP4_VALUES,
+    float_format_values,
+    fp4_decode,
+    fp4_encode,
+    positive_format_values,
+    round_to_format,
+    round_to_values,
+)
+from .nvfp4 import BlockQuantized, nvfp4_qdq, nvfp4_quantize
+from .packing import (
+    PackedRazerWeight,
+    decode_offset_register,
+    encode_offset_register,
+    pack_fp4_codes,
+    pack_weight,
+    unpack_fp4_codes,
+)
+from .qlinear import QuantConfig, QuantizedLinear, qdq_activation, qdq_weight, qlinear
+from .razer import (
+    ACT_SPECIAL_VALUES,
+    WEIGHT_SPECIAL_VALUES,
+    razer_qdq,
+    razer_quantize,
+    sv_pairs_to_set,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,59 @@
+"""AWQ-style activation-aware weight scaling (Lin et al. 2024b), used by the
+paper's Table 8 combination study (AWQ + {INT4, FP4, RaZeR}).
+
+AWQ protects salient weight channels (those seeing large activation
+magnitudes) by scaling them up before quantization and folding the inverse
+scale into the preceding op / the activation path:
+
+    W' = W * s[:, None],   x' = x / s,   s = a_stat^alpha
+
+alpha is grid-searched to minimize the quantized layer's output MSE on a
+calibration batch.  This is offline PTQ machinery -- plain numpy/jnp, no jit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+__all__ = ["AWQResult", "awq_search", "apply_awq"]
+
+
+@dataclass
+class AWQResult:
+    scales: jnp.ndarray  # (d_in,) per-input-channel weight multiplier
+    alpha: float
+    out_mse: float
+
+
+def awq_search(
+    w,
+    calib_x,
+    quantize_fn: Callable,
+    alphas: Sequence[float] = tuple(i / 10 for i in range(0, 11)),
+) -> AWQResult:
+    """Grid-search the AWQ exponent for one (d_in, d_out) layer.
+
+    ``quantize_fn(w) -> w_hat`` is any of the repo's quantizers (axis=0 blocked),
+    so AWQ composes with INT4 / FP4 / RaZeR exactly as in Table 8.
+    """
+    w = jnp.asarray(w)
+    x = jnp.asarray(calib_x).reshape(-1, w.shape[0])
+    a_stat = jnp.mean(jnp.abs(x), axis=0) + 1e-8  # (d_in,)
+    ref = x @ w
+    best = None
+    for alpha in alphas:
+        s = a_stat**alpha
+        s = s / jnp.sqrt(jnp.max(s) * jnp.min(s))  # normalize around 1 (AWQ trick)
+        w_hat = quantize_fn(w * s[:, None]) / s[:, None]
+        mse = float(jnp.mean((x @ w_hat - ref) ** 2))
+        if best is None or mse < best.out_mse:
+            best = AWQResult(scales=s, alpha=float(alpha), out_mse=mse)
+    return best
+
+
+def apply_awq(w, result: AWQResult, quantize_fn: Callable):
+    """Return the dequantized AWQ-quantized weight (inverse scale folded back)."""
+    s = result.scales
+    return quantize_fn(w * s[:, None]) / s[:, None]

@@ -1,0 +1,107 @@
+"""Baseline 4-bit quantization formats the paper compares against (§5.1, App B.1).
+
+  * MXFP4        -- OCP MX: block 32, E8M0 (power-of-two) scale, FP4 elements.
+  * INT4         -- symmetric integer grid, FP16 block scale (AWQ/Marlin-style).
+  * NF4          -- QLoRA NormalFloat-4 lookup table, absmax block scale.
+  * FourOverSix  -- Cook et al.: per block, scale either to the full FP4 range
+                    (max 6) or the narrower range (max 4), pick lower MSE.
+
+All share NVFP4's blocked representation so benchmarks can treat them uniformly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FP4_MAX, FP4_VALUES, positive_format_values, round_to_values
+from .nvfp4 import BlockQuantized, _block_scales, _safe_div, block_reshape
+
+__all__ = ["mxfp4_quantize", "int4_quantize", "nf4_quantize", "fouroversix_quantize"]
+
+_FP4_GRID = np.unique(FP4_VALUES)
+_FP4_GRID_NARROW = _FP4_GRID[np.abs(_FP4_GRID) <= 4.0]  # FourOverSix narrow range
+
+# QLoRA NF4 lookup table (Dettmers et al. 2023, information-theoretically
+# optimal quantiles of N(0,1), normalized to [-1, 1]).
+NF4_VALUES = np.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    np.float32,
+)
+
+
+def mxfp4_quantize(x, *, block_size: int = 32, axis: int = -1, **_) -> BlockQuantized:
+    """OCP MXFP4: shared scale 2^(floor(log2(absmax)) - emax_fp4), emax_fp4 = 2."""
+    xb = block_reshape(x, block_size, axis)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    exp = jnp.floor(jnp.log2(jnp.where(absmax == 0, 1.0, absmax))) - 2.0
+    exp = jnp.clip(exp, -127.0, 127.0)  # E8M0 range
+    scale = jnp.exp2(exp)
+    scaled = _safe_div(xb, scale[..., None])
+    q = round_to_values(scaled, _FP4_GRID)
+    return BlockQuantized(q=q, block_scale=scale, tensor_scale=jnp.asarray(1.0, x.dtype), axis=axis)
+
+
+def int4_quantize(x, *, block_size: int = 32, axis: int = -1, **_) -> BlockQuantized:
+    """Symmetric INT4 {-7..7} with a high-precision (fp16-rounded) block scale."""
+    xb = block_reshape(x, block_size, axis)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = (absmax / 7.0).astype(jnp.float16).astype(x.dtype)
+    scaled = _safe_div(xb, scale[..., None])
+    q = jnp.clip(jnp.round(scaled), -7, 7)
+    return BlockQuantized(q=q, block_scale=scale, tensor_scale=jnp.asarray(1.0, x.dtype), axis=axis)
+
+
+def nf4_quantize(x, *, block_size: int = 32, axis: int = -1, **_) -> BlockQuantized:
+    """QLoRA NF4: absmax-normalized lookup-table quantization."""
+    xb = block_reshape(x, block_size, axis)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = absmax.astype(jnp.float16).astype(x.dtype)  # stored bf16/fp16 in QLoRA
+    scaled = _safe_div(xb, scale[..., None])
+    q = round_to_values(scaled, NF4_VALUES)
+    return BlockQuantized(q=q, block_scale=scale, tensor_scale=jnp.asarray(1.0, x.dtype), axis=axis)
+
+
+def fouroversix_quantize(
+    x,
+    *,
+    block_size: int = 16,
+    scale_fmt: str = "e4m3",
+    axis: int = -1,
+    tensor_scale: Optional[jnp.ndarray] = None,
+    **_,
+) -> BlockQuantized:
+    """FourOverSix (Cook et al. 2025): adaptive block scaling.
+
+    Each block evaluates two scale candidates -- absmax mapped to 6 (full FP4
+    range) or to 4 (narrow range, elements then restricted to |q| <= 4) -- and
+    keeps the one with lower MSE.  App. B.1.
+    """
+    xb = block_reshape(x, block_size, axis)
+    scale_grid_max = float(positive_format_values(scale_fmt)[-1])
+    if tensor_scale is None:
+        tensor_scale = jnp.max(jnp.abs(x)) / (scale_grid_max * FP4_MAX)
+        tensor_scale = jnp.where(tensor_scale == 0, 1.0, tensor_scale)
+
+    best_q = None
+    for elem_max, grid in ((6.0, _FP4_GRID), (4.0, _FP4_GRID_NARROW)):
+        d8 = _block_scales(xb, scale_fmt, elem_max, tensor_scale)
+        scaled = _safe_div(xb, (tensor_scale * d8)[..., None])
+        q = round_to_values(scaled, grid)
+        err = jnp.sum((q * (tensor_scale * d8)[..., None] - xb) ** 2, axis=-1)
+        if best_q is None:
+            best_q, best_d8, best_err = q, d8, err
+        else:
+            take = err < best_err
+            best_q = jnp.where(take[..., None], q, best_q)
+            best_d8 = jnp.where(take, d8, best_d8)
+            best_err = jnp.where(take, err, best_err)
+
+    return BlockQuantized(q=best_q, block_scale=best_d8, tensor_scale=tensor_scale, axis=axis)

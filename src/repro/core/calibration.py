@@ -1,0 +1,83 @@
+"""Special-value calibration (paper §4.2, Fig. 3, Table 12, App. B.2).
+
+Weights: offline sweep of candidate SV pairs; the paper finds the error curve
+is parabolic in |v| with the minimum at +-5, and picks a model-dependent second
+pair on top of +-5.
+
+Activations: the 2 allowed SVs (one +- pair) are chosen on a calibration set
+(the paper uses Pile samples; we use whatever activation samples the caller
+collected).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .nvfp4 import nvfp4_qdq
+from .razer import razer_qdq, sv_pairs_to_set
+
+__all__ = [
+    "DEFAULT_SV_MAGNITUDES",
+    "sv_pair_sweep",
+    "select_weight_sv_pairs",
+    "calibrate_activation_sv",
+]
+
+# §4.2: SVs are multiples of 0.5; the decoder constrains magnitude to
+# 6.0 + [-3.5, 3.5] => [2.5, 9.5].
+DEFAULT_SV_MAGNITUDES: Tuple[float, ...] = tuple(
+    m / 2.0 for m in range(5, 20) if m / 2.0 not in (3.0, 4.0, 6.0)  # skip grid collisions
+)
+
+
+def _err(x, xhat):
+    return float(jnp.sum((x - xhat) ** 2))
+
+
+def sv_pair_sweep(
+    w,
+    magnitudes: Sequence[float] = DEFAULT_SV_MAGNITUDES,
+    base_pairs: Sequence[float] = (),
+    block_size: int = 16,
+    scale_fmt: str = "e3m3",
+) -> Dict[float, float]:
+    """Fig. 3: normalized quantization error of adding one SV pair.
+
+    Returns {magnitude: error / nvfp4_error}.  ``base_pairs`` lets the caller
+    stack the sweep on top of already-selected pairs (the second-pair search).
+    """
+    w = jnp.asarray(w)
+    base_err = _err(w, nvfp4_qdq(w, block_size=block_size, scale_fmt=scale_fmt))
+    out = {}
+    for m in magnitudes:
+        svs = sv_pairs_to_set(*base_pairs, m)
+        xhat = razer_qdq(w, special_values=svs, block_size=block_size, scale_fmt=scale_fmt)
+        out[float(m)] = _err(w, xhat) / max(base_err, 1e-30)
+    return out
+
+
+def select_weight_sv_pairs(
+    w, magnitudes: Sequence[float] = DEFAULT_SV_MAGNITUDES, block_size: int = 16
+) -> Tuple[float, float]:
+    """App. B.2 procedure: best pair, then best second pair on top of it."""
+    first = sv_pair_sweep(w, magnitudes, block_size=block_size)
+    m0 = min(first, key=first.get)
+    second = sv_pair_sweep(w, [m for m in magnitudes if m != m0], base_pairs=(m0,), block_size=block_size)
+    m1 = min(second, key=second.get)
+    return (m0, m1)
+
+
+def calibrate_activation_sv(
+    act_samples: Iterable, magnitudes: Sequence[float] = DEFAULT_SV_MAGNITUDES, block_size: int = 16
+) -> float:
+    """Pick the single activation SV pair minimizing calib-set error (§4.2)."""
+    totals: Dict[float, float] = {float(m): 0.0 for m in magnitudes}
+    for x in act_samples:
+        x = jnp.asarray(x)
+        for m in magnitudes:
+            xhat = razer_qdq(
+                x, special_values=sv_pairs_to_set(m), block_size=block_size, scale_fmt="e4m3"
+            )
+            totals[float(m)] += _err(x, xhat)
+    return min(totals, key=totals.get)

@@ -1,0 +1,161 @@
+"""Low-precision floating-point value systems used by NVFP4 / RaZeR.
+
+Implements the OCP Microscaling (MX) element formats the paper builds on:
+
+  * FP4-E2M1  (Eq. 5)  -- values +-{0, 0.5, 1, 1.5, 2, 3, 4, 6}
+  * FP8-E4M3  (Eq. 4)  -- OCP variant: no inf, max 448, subnormals 2^-6 * m/8
+  * generic ExMy       -- for the block-scale ablation (Tables 1/2/10/11):
+                          E5M2, E4M3, E3M3, E4M2, E3M4, E2M4, E3M2, E2M3, ...
+
+Everything here is pure jnp and shape-polymorphic.  "Rounding" means
+round-to-nearest (ties handled by the underlying searchsorted midpoint
+convention, matching round-half-away from the sorted value grid -- the paper's
+|.| operator), implemented by bucketing against midpoints of the sorted value
+set.  This is exact for value sets of ~2^8 entries and vectorizes on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FP4_VALUES",
+    "FP4_POS_VALUES",
+    "FP4_MAX",
+    "FP8_E4M3_MAX",
+    "float_format_values",
+    "positive_format_values",
+    "round_to_values",
+    "round_to_format",
+    "fp4_encode",
+    "fp4_decode",
+    "ValueSet",
+]
+
+# ---------------------------------------------------------------------------
+# FP4-E2M1 (Eq. 5).  code = s<<3 | e<<1 | m
+#   e == 0 : (-1)^s * (m/2)            (subnormal; +-0 and +-0.5)
+#   e != 0 : (-1)^s * 2^(e-1) * (1+m/2)
+# ---------------------------------------------------------------------------
+FP4_POS_VALUES = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+FP4_VALUES = np.concatenate([FP4_POS_VALUES, -FP4_POS_VALUES])  # code order 0..15
+FP4_MAX = 6.0
+FP4_NEG_ZERO_CODE = 8  # s=1, e=0, m=0 -- the redundant code RaZeR remaps.
+
+FP8_E4M3_MAX = 448.0
+
+
+def _exmy_positive_values(n_exp: int, n_man: int, ocp_e4m3: bool = False) -> np.ndarray:
+    """All non-negative representable values of an ExMy minifloat.
+
+    Follows Eq. 4's convention generalized: bias = 2^(x-1) - 1, subnormals at
+    E=0.  For the OCP FP8-E4M3 variant, the top exponent's all-ones-mantissa
+    encoding is NaN, so the max is 448 rather than 480; we reproduce that by
+    dropping the final value.  Other formats in the scale ablation are treated
+    as pure IEEE-like grids (no inf/nan reservations), matching how the paper
+    uses them (a value grid to round onto).
+    """
+    bias = 2 ** (n_exp - 1) - 1
+    vals = [0.0]
+    n_mant_vals = 2**n_man
+    for e in range(2**n_exp):
+        for m in range(n_mant_vals):
+            if e == 0:
+                v = 2.0 ** (1 - bias) * (m / n_mant_vals)
+            else:
+                v = 2.0 ** (e - bias) * (1.0 + m / n_mant_vals)
+            vals.append(v)
+    out = np.unique(np.array(vals, np.float64)).astype(np.float32)
+    if ocp_e4m3:
+        out = out[:-1]  # drop 480 -> max 448 (NaN slot in OCP E4M3)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def positive_format_values(fmt: str) -> np.ndarray:
+    """Sorted non-negative value grid for a format name like 'e4m3'."""
+    fmt = fmt.lower()
+    if fmt == "fp4" or fmt == "e2m1":
+        return FP4_POS_VALUES
+    if not (fmt.startswith("e") and "m" in fmt):
+        raise ValueError(f"unknown format {fmt!r}")
+    n_exp = int(fmt[1 : fmt.index("m")])
+    n_man = int(fmt[fmt.index("m") + 1 :])
+    return _exmy_positive_values(n_exp, n_man, ocp_e4m3=(fmt == "e4m3"))
+
+
+@functools.lru_cache(maxsize=None)
+def float_format_values(fmt: str) -> np.ndarray:
+    """Sorted signed value grid for a format name."""
+    pos = positive_format_values(fmt)
+    return np.unique(np.concatenate([pos, -pos])).astype(np.float32)
+
+
+@dataclass(frozen=True)
+class ValueSet:
+    """A finite quantization grid with fast nearest-value rounding."""
+
+    values: tuple  # sorted floats
+
+    @staticmethod
+    def from_format(fmt: str, signed: bool = True) -> "ValueSet":
+        v = float_format_values(fmt) if signed else positive_format_values(fmt)
+        return ValueSet(tuple(float(x) for x in v))
+
+    def round(self, x):
+        return round_to_values(x, np.array(self.values, np.float32))
+
+    @property
+    def max(self) -> float:
+        return float(self.values[-1])
+
+
+def round_to_values(x, values: np.ndarray):
+    """Round each element of x to the nearest entry of the sorted 1-D grid.
+
+    Ties at exact midpoints round toward the *lower* (more negative) grid
+    value -- the convention implied by searchsorted(side='left') on midpoints.
+    The paper's |.| operator is unspecified on ties; any fixed convention is
+    valid, but the Pallas kernels reproduce this one bit-exactly.
+    """
+    values = np.asarray(values, np.float32)
+    mids = (values[1:] + values[:-1]) / 2.0
+    idx = jnp.searchsorted(jnp.asarray(mids), x, side="left")
+    return jnp.asarray(values)[idx]
+
+
+def round_to_format(x, fmt: str, signed: bool = True):
+    v = float_format_values(fmt) if signed else positive_format_values(fmt)
+    return round_to_values(x, v)
+
+
+# ---------------------------------------------------------------------------
+# FP4 code <-> value conversion (for packing).  Codes are uint8 in [0, 16).
+# Code layout follows Eq. 5: s<<3 | e<<1 | m, so FP4_VALUES[code] is the value.
+# ---------------------------------------------------------------------------
+def fp4_encode(x):
+    """Map values ALREADY on the FP4 grid (or arbitrary reals: nearest) to codes.
+
+    The redundant -0 code (8) is never produced: zeros encode as +0 (code 0).
+    """
+    mag = jnp.abs(x)
+    mag_code = jnp.searchsorted(
+        jnp.asarray((FP4_POS_VALUES[1:] + FP4_POS_VALUES[:-1]) / 2.0), mag, side="left"
+    ).astype(jnp.uint8)
+    sign = (x < 0) & (mag_code > 0)  # -0 -> +0
+    return jnp.where(sign, mag_code + jnp.uint8(8), mag_code)
+
+
+def fp4_decode(codes, special_value=None):
+    """codes (uint8 0..15) -> float32 values.
+
+    If ``special_value`` is given (scalar or broadcastable array), code 8
+    (redundant -0) decodes to it instead -- this is the RaZeR remap.
+    """
+    vals = jnp.asarray(FP4_VALUES)[codes.astype(jnp.int32)]
+    if special_value is not None:
+        vals = jnp.where(codes == FP4_NEG_ZERO_CODE, special_value, vals)
+    return vals

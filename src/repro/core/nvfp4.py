@@ -1,0 +1,119 @@
+"""NVFP4 block quantization (paper §3, Eq. 1-3) with configurable block size
+and block-scale format (for the Table 1/2 ablations).
+
+A tensor is blocked along one axis into groups of ``block_size`` (default 16).
+Per Eq. 1-3:
+
+    d32   = amax(|X|) / (Qmax_fp8 * Qmax_fp4)          tensor-wise FP32 scale
+    d8_i  = round_fp8( amax(|X_i|) / (d32 * Qmax_fp4) ) per-block FP8 scale
+    q_i   = round_fp4( X_i / (d32 * d8_i) )             FP4 elements
+
+Dequantization is ``q_i * d32 * d8_i``.
+
+All functions are pure jnp and differentiable-through via a straight-through
+estimator is NOT provided here (the paper is PTQ); training integration uses
+these as non-differentiable transforms on weights / stop-gradient on acts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import (
+    FP4_MAX,
+    FP4_VALUES,
+    positive_format_values,
+    round_to_values,
+)
+
+__all__ = ["BlockQuantized", "nvfp4_quantize", "nvfp4_qdq", "block_reshape", "block_unreshape"]
+
+
+def block_reshape(x, block_size: int, axis: int = -1):
+    """(.., K, ..) -> (..., K//B, B) with the blocked axis moved last."""
+    x = jnp.moveaxis(x, axis, -1)
+    k = x.shape[-1]
+    if k % block_size != 0:
+        raise ValueError(f"axis size {k} not divisible by block_size {block_size}")
+    return x.reshape(*x.shape[:-1], k // block_size, block_size)
+
+
+def block_unreshape(xb, axis: int = -1):
+    """inverse of block_reshape."""
+    x = xb.reshape(*xb.shape[:-2], xb.shape[-2] * xb.shape[-1])
+    return jnp.moveaxis(x, -1, axis)
+
+
+@dataclass
+class BlockQuantized:
+    """A block-quantized tensor in 'value space' (not yet bit-packed).
+
+    q            : elements on the element grid, blocked shape (..., nblk, B)
+    block_scale  : per-block scale on the scale grid, shape (..., nblk)
+    tensor_scale : scalar f32
+    sv           : per-block special value actually used (0.0 where none /
+                   plain NVFP4), shape (..., nblk)  [RaZeR only]
+    sv_index     : per-block index into the allowed-SV set (-1 = none)
+    axis         : which axis of the original tensor was blocked
+    """
+
+    q: jnp.ndarray
+    block_scale: jnp.ndarray
+    tensor_scale: jnp.ndarray
+    axis: int = -1
+    sv: Optional[jnp.ndarray] = None
+    sv_index: Optional[jnp.ndarray] = None
+
+    def dequantize(self):
+        x = self.q * (self.block_scale * self.tensor_scale)[..., None]
+        return block_unreshape(x, self.axis)
+
+    @property
+    def blocked_dequant(self):
+        return self.q * (self.block_scale * self.tensor_scale)[..., None]
+
+
+def _safe_div(a, b):
+    return a / jnp.where(b == 0, 1.0, b)
+
+
+def _block_scales(xb, scale_fmt: str, elem_max: float, tensor_scale):
+    """Eq. 2: per-block scale rounded onto the positive scale grid."""
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    raw = _safe_div(absmax, tensor_scale * elem_max)
+    grid = positive_format_values(scale_fmt)
+    scale = round_to_values(raw, grid)
+    # A zero scale would kill the whole block even if it has small nonzeros;
+    # promote to the smallest positive representable in that case.
+    smallest = float(grid[grid > 0][0])
+    scale = jnp.where((scale == 0) & (absmax > 0), smallest, scale)
+    return scale
+
+
+def nvfp4_quantize(
+    x,
+    *,
+    block_size: int = 16,
+    scale_fmt: str = "e4m3",
+    axis: int = -1,
+    tensor_scale: Optional[jnp.ndarray] = None,
+) -> BlockQuantized:
+    """Eq. 1-3. Returns the quantized representation (not dequantized)."""
+    xb = block_reshape(x, block_size, axis)
+    scale_grid_max = float(positive_format_values(scale_fmt)[-1])
+    if tensor_scale is None:
+        tensor_scale = jnp.max(jnp.abs(x)) / (scale_grid_max * FP4_MAX)
+        tensor_scale = jnp.where(tensor_scale == 0, 1.0, tensor_scale)
+    d8 = _block_scales(xb, scale_fmt, FP4_MAX, tensor_scale)
+    denom = (tensor_scale * d8)[..., None]
+    scaled = _safe_div(xb, denom)
+    q = round_to_values(scaled, np.unique(FP4_VALUES))
+    return BlockQuantized(q=q, block_scale=d8, tensor_scale=tensor_scale, axis=axis)
+
+
+def nvfp4_qdq(x, **kw):
+    """Quantize-dequantize (fake-quant) convenience."""
+    return nvfp4_quantize(x, **kw).dequantize()

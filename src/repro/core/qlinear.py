@@ -1,0 +1,141 @@
+"""Quantized linear layer -- the integration point between the RaZeR numerics
+and the model zoo / serving engine.
+
+Modes:
+  * ``bf16``      -- plain matmul (training / FP16 baseline rows).
+  * ``fakequant`` -- quantize-dequantize W (offline semantics) and optionally A
+                     (dynamic, Eq. 6 with the activation SV pair) then matmul in
+                     bf16.  Bit-exact simulation of RaZeR arithmetic; used for
+                     every accuracy experiment.  Optional straight-through
+                     estimator for QAT (beyond-paper).
+  * ``packed``    -- W stored in the 4.5-bit wire format; forward runs the
+                     Pallas kernel (TPU) or its jnp reference (CPU).  Used by
+                     the serving engine; this is the Marlin-kernel analogue.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .baselines import fouroversix_quantize, int4_quantize, mxfp4_quantize, nf4_quantize
+from .nvfp4 import nvfp4_quantize
+from .packing import PackedRazerWeight, pack_weight
+from .razer import ACT_SPECIAL_VALUES, razer_quantize
+
+__all__ = ["QuantConfig", "QuantizedLinear", "qdq_weight", "qdq_activation", "qlinear"]
+
+_FORMATS = {
+    "nvfp4": nvfp4_quantize,
+    "razer": razer_quantize,
+    "mxfp4": mxfp4_quantize,
+    "int4": int4_quantize,
+    "nf4": nf4_quantize,
+    "fouroversix": fouroversix_quantize,
+}
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Hashable (static-arg friendly) quantization policy."""
+
+    mode: str = "bf16"  # bf16 | fakequant | packed
+    weight_format: str = "razer"
+    act_format: Optional[str] = None  # None = weight-only quantization
+    weight_svs: Tuple[float, ...] = (5.0, -5.0, 8.0, -8.0)
+    act_svs: Tuple[float, ...] = ACT_SPECIAL_VALUES
+    block_size: int = 16
+    weight_scale_fmt: str = "e3m3"  # §4.1: E3M3 for weights
+    act_scale_fmt: str = "e4m3"  # §4.1: activations keep E4M3
+    kv_format: Optional[str] = None  # e.g. 'razer' to quantize the KV cache
+    ste: bool = False  # straight-through estimator (QAT, beyond-paper)
+
+    @property
+    def sv_magnitudes(self) -> Tuple[float, float]:
+        mags = sorted({abs(v) for v in self.weight_svs})
+        assert len(mags) == 2, "packed path expects 2 SV pairs"
+        return (mags[0], mags[1])
+
+
+def _format_kwargs(cfg: QuantConfig, weight: bool) -> dict:
+    fmt = cfg.weight_format if weight else cfg.act_format
+    kw = {"block_size": cfg.block_size}
+    if fmt in ("nvfp4", "fouroversix"):
+        kw["scale_fmt"] = cfg.weight_scale_fmt if weight else cfg.act_scale_fmt
+    if fmt == "razer":
+        kw["scale_fmt"] = cfg.weight_scale_fmt if weight else cfg.act_scale_fmt
+        kw["special_values"] = cfg.weight_svs if weight else cfg.act_svs
+    if fmt in ("mxfp4", "int4", "nf4"):
+        kw["block_size"] = max(cfg.block_size, 32) if fmt == "mxfp4" else cfg.block_size
+    return kw
+
+
+def qdq_weight(w, cfg: QuantConfig):
+    """Fake-quantize a (d_in, d_out) weight along the reduction dim (axis 0)."""
+    fn = _FORMATS[cfg.weight_format]
+    orig = w.dtype
+    out = fn(w.astype(jnp.float32), axis=0, **_format_kwargs(cfg, weight=True)).dequantize()
+    return out.astype(orig)
+
+
+def qdq_activation(x, cfg: QuantConfig):
+    """Dynamically fake-quantize activations along the feature dim (axis -1)."""
+    fn = _FORMATS[cfg.act_format]
+    orig = x.dtype
+    xq = fn(x.astype(jnp.float32), axis=-1, **_format_kwargs(cfg, weight=False)).dequantize()
+    xq = xq.astype(orig)
+    if cfg.ste:
+        xq = x + jax.lax.stop_gradient(xq - x)
+    return xq
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantizedLinear:
+    """A linear layer's parameter bundle under a quantization policy.
+
+    Holds either a dense weight (bf16/fakequant modes) or a PackedRazerWeight
+    (packed mode).  Pytree-registered so it can live inside model param trees,
+    be sharded by pjit and stand in as ShapeDtypeStructs for the dry-run.
+    """
+
+    w: object  # jnp.ndarray | PackedRazerWeight
+    b: Optional[jnp.ndarray] = None
+
+    def tree_flatten(self):
+        return (self.w, self.b), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @staticmethod
+    def create(w, cfg: QuantConfig, b=None) -> "QuantizedLinear":
+        if cfg.mode == "packed":
+            pw = pack_weight(
+                jnp.asarray(w, jnp.float32),
+                sv_magnitudes=cfg.sv_magnitudes,
+                block_size=cfg.block_size,
+            )
+            return QuantizedLinear(w=pw, b=b)
+        return QuantizedLinear(w=w, b=b)
+
+
+def qlinear(x, lin, cfg: QuantConfig):
+    """y = quant(x) @ quant(W) + b under the configured mode."""
+    w, b = (lin.w, lin.b) if isinstance(lin, QuantizedLinear) else (lin, None)
+    if cfg.mode == "packed" or isinstance(w, PackedRazerWeight):
+        from repro.kernels import ops  # lazy: kernels import core
+
+        y = ops.razer_matmul(x, w)
+    else:
+        if cfg.mode == "fakequant":
+            w = qdq_weight(w, cfg)
+            if cfg.act_format is not None:
+                x = qdq_activation(x, cfg)
+        y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y

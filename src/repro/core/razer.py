@@ -1,0 +1,116 @@
+"""RaZeR: Redundant Zero Remapping (paper §4, Eq. 6-7).
+
+For each block, the redundant FP4 -0 code is remapped to one *special value*
+(SV) chosen from a small allowed set V so that the block quantization error is
+minimized:
+
+    v_i  = argmin_{v in V} || round(X_scaled, FP4 ∪ {v}) - X_scaled ||^2   (Eq. 6)
+    q_i  = round(X_scaled, FP4 ∪ {v_i})                                    (Eq. 7)
+
+Weights get |V| = 4 (2 free bits from the E3M3 block scale, §4.1), activations
+get |V| = 2 (1 free bit from the always-positive E4M3 scale).  SVs are
+multiples of 0.5 organized in +- pairs (hardware decoder constraint, §4.2/4.4).
+
+The paper's defaults: activations V = {+5, -5}; weights V = {+-5, +-p2} with
+p2 in {7, 8, 9} model-dependent (Table 12; 8 for most models).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FP4_MAX, FP4_VALUES, round_to_values
+from .nvfp4 import BlockQuantized, _block_scales, _safe_div, block_reshape
+
+__all__ = [
+    "WEIGHT_SPECIAL_VALUES",
+    "ACT_SPECIAL_VALUES",
+    "razer_quantize",
+    "razer_qdq",
+    "sv_pairs_to_set",
+]
+
+# Paper defaults (Table 12: +-5 everywhere; second weight pair +-8 for most).
+WEIGHT_SPECIAL_VALUES: Tuple[float, ...] = (5.0, -5.0, 8.0, -8.0)
+ACT_SPECIAL_VALUES: Tuple[float, ...] = (5.0, -5.0)
+
+_FP4_GRID = np.unique(FP4_VALUES)
+
+
+def sv_pairs_to_set(*magnitudes: float) -> Tuple[float, ...]:
+    """(5, 8) -> (5, -5, 8, -8): SVs always come in additive-inverse pairs."""
+    out = []
+    for m in magnitudes:
+        out += [float(m), float(-m)]
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_with_sv(v: float) -> np.ndarray:
+    if float(v) in set(float(g) for g in _FP4_GRID):
+        raise ValueError(f"special value {v} collides with the FP4 grid")
+    if abs(v) * 2 != int(abs(v) * 2):
+        raise ValueError(f"special value {v} must be a multiple of 0.5 (§4.2)")
+    return np.unique(np.concatenate([_FP4_GRID, [np.float32(v)]]))
+
+
+def razer_quantize(
+    x,
+    *,
+    special_values: Sequence[float] = WEIGHT_SPECIAL_VALUES,
+    block_size: int = 16,
+    scale_fmt: str = "e3m3",
+    axis: int = -1,
+    tensor_scale: Optional[jnp.ndarray] = None,
+) -> BlockQuantized:
+    """Eq. 6-7 on top of the NVFP4 scaling pipeline (Eq. 1-2 unchanged).
+
+    ``scale_fmt`` defaults to E3M3 for weights per §4.1 (lossless vs E4M3,
+    Table 1, and frees the 2 metadata bits).  Pass 'e4m3' + 2 SVs for the
+    activation variant.
+    """
+    svs = tuple(float(v) for v in special_values)
+    xb = block_reshape(x, block_size, axis)
+    from .formats import positive_format_values
+
+    scale_grid_max = float(positive_format_values(scale_fmt)[-1])
+    if tensor_scale is None:
+        tensor_scale = jnp.max(jnp.abs(x)) / (scale_grid_max * FP4_MAX)
+        tensor_scale = jnp.where(tensor_scale == 0, 1.0, tensor_scale)
+    d8 = _block_scales(xb, scale_fmt, FP4_MAX, tensor_scale)
+    denom = (tensor_scale * d8)[..., None]
+    scaled = _safe_div(xb, denom)
+
+    # Candidate 'no special value' == plain NVFP4 rounding.
+    base_q = round_to_values(scaled, _FP4_GRID)
+    best_q = base_q
+    best_err = jnp.sum((base_q - scaled) ** 2, axis=-1)
+    best_idx = jnp.full(best_err.shape, -1, jnp.int32)
+    best_sv = jnp.zeros(best_err.shape, scaled.dtype)
+
+    # The SV search space is static (2 or 4 values): unrolled python loop.
+    for i, v in enumerate(svs):
+        q_v = round_to_values(scaled, _grid_with_sv(v))
+        err_v = jnp.sum((q_v - scaled) ** 2, axis=-1)
+        take = err_v < best_err
+        best_q = jnp.where(take[..., None], q_v, best_q)
+        best_err = jnp.where(take, err_v, best_err)
+        best_idx = jnp.where(take, i, best_idx)
+        best_sv = jnp.where(take, jnp.asarray(v, scaled.dtype), best_sv)
+
+    return BlockQuantized(
+        q=best_q,
+        block_scale=d8,
+        tensor_scale=tensor_scale,
+        axis=axis,
+        sv=best_sv,
+        sv_index=best_idx,
+    )
+
+
+def razer_qdq(x, **kw):
+    """Quantize-dequantize (fake-quant) convenience."""
+    return razer_quantize(x, **kw).dequantize()

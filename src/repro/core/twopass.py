@@ -1,0 +1,85 @@
+"""App. D.3: two-pass realization of RaZeR W4A4 on NVFP4-only hardware.
+
+Hardware with a native NVFP4 GEMM but no remap datapath can still execute
+RaZeR exactly by splitting the weight into two NVFP4-legal matrices:
+
+    D = A @ B_main + A @ B_comp
+
+B_main replaces each remapped -0 with a signed *base* value; B_comp holds the
+corrective offset at those slots (zero elsewhere).  Both matrices contain only
+FP4-representable values (same block scales), so each pass is a standard
+block-scaled NVFP4 GEMM.  The paper's example for {+-5, +-8}:
+
+    +-5 = +-4 + +-1        +-8 = +-4 + +-4
+
+General rule (paper: "any pair of signed special values expressible as the
+sum of two FP4-representable values"): we search the FP4 grid for a split
+s = x1 + x2 with both halves representable; §D.3 lists the reachable set
+{+-2.5, ..., +-12}.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FP4_POS_VALUES
+from .nvfp4 import BlockQuantized
+from .razer import razer_quantize
+
+__all__ = ["split_special_value", "two_pass_weights", "two_pass_matmul"]
+
+_POS = [float(v) for v in FP4_POS_VALUES]
+
+
+def split_special_value(v: float) -> Tuple[float, float]:
+    """s -> (x1, x2), both FP4-representable, x1 + x2 == s (paper §D.3)."""
+    sign = -1.0 if v < 0 else 1.0
+    mag = abs(v)
+    # the paper's canonical base is +-4 ("+0 -> +-4" in B_main); fall back to
+    # other grid values for magnitudes 4 can't reach
+    for x1 in [4.0] + sorted((p for p in _POS if p != 4.0), reverse=True):
+        x2 = mag - x1
+        if x2 in _POS or -x2 in _POS:
+            return sign * x1, sign * x2
+    raise ValueError(f"special value {v} not expressible as a 2-term FP4 sum")
+
+
+def two_pass_weights(bq: BlockQuantized) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RaZeR-quantized weight -> (W_main, W_comp) dense (dequantized) halves.
+
+    W_main + W_comp == bq.dequantize() exactly; W_comp is nonzero only at
+    remapped slots (its measured density drives Fig. 7's sparse bound)."""
+    sv = bq.sv[..., None]
+    is_sv = (bq.sv_index[..., None] >= 0) & (bq.q == sv) & (sv != 0)
+    splits = {}
+    for v in np.unique(np.asarray(bq.sv)):
+        if v != 0:
+            splits[float(v)] = split_special_value(float(v))
+    main_map = jnp.zeros_like(bq.q)
+    comp_map = jnp.zeros_like(bq.q)
+    for v, (x1, x2) in splits.items():
+        hit = is_sv & (sv == v)
+        main_map = jnp.where(hit, x1, main_map)
+        comp_map = jnp.where(hit, x2, comp_map)
+    q_main = jnp.where(is_sv, main_map, bq.q)
+    q_comp = jnp.where(is_sv, comp_map, jnp.zeros_like(bq.q))
+    scale = (bq.block_scale * bq.tensor_scale)[..., None]
+    from .nvfp4 import block_unreshape
+
+    w_main = block_unreshape(q_main * scale, bq.axis)
+    w_comp = block_unreshape(q_comp * scale, bq.axis)
+    return w_main, w_comp
+
+
+def two_pass_matmul(x, w, **razer_kw):
+    """Exact RaZeR W4 GEMM via two NVFP4-legal passes (reference semantics).
+
+    Returns (y, comp_density) where comp_density is the fraction of nonzero
+    B_comp entries (the Fig. 7 sparsity-exploitation bound)."""
+    bq = razer_quantize(w, axis=0, **razer_kw)
+    w_main, w_comp = two_pass_weights(bq)
+    y = x @ w_main + x @ w_comp  # two accumulating GEMM passes
+    density = jnp.mean((w_comp != 0).astype(jnp.float32))
+    return y, density

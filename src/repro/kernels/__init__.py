@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's perf-critical hot-spots (§4.3):
+packed-weight RaZeR GEMM and fused dynamic activation quantization."""
+from . import ops, ref  # noqa: F401

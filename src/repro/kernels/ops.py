@@ -1,0 +1,117 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles: CPU-vs-TPU dispatch (interpret mode / jnp reference on CPU), batch
+flattening, M-padding, block-size selection, and the deferred tensor-scale
+multiply.  Models and the serving engine call these -- never the raw kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedRazerWeight
+
+from . import ref
+from .razer_matmul import razer_matmul_pallas
+from .razer_quantize import razer_act_qdq_pallas
+
+__all__ = ["razer_matmul", "razer_act_qdq", "on_tpu", "pick_blocks"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _largest_divisor(n: int, candidates) -> int:
+    for c in candidates:
+        if n % c == 0:
+            return c
+    return n
+
+
+def pick_blocks(m: int, n: int, k: int):
+    """MXU-aligned block shapes that divide the problem (the §4.3 auto-tuner's
+    TPU analogue picks from this lattice; see benchmarks/kernel_bench.py)."""
+    bm = _largest_divisor(m, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    bn = _largest_divisor(n, (256, 128, 64, 32, 16, 8))
+    bk = _largest_divisor(k, (512, 256, 128, 64, 32, 16))
+    return bm, bn, bk
+
+
+def razer_matmul(x, pw: PackedRazerWeight, *, force_pallas: bool = False, interpret: bool | None = None):
+    """y = x @ dequant(pw) for arbitrary-batch x (..., K).
+
+    On TPU: Pallas kernel.  On CPU: jnp reference (a Pallas CPU 'compile' would
+    be interpret-mode anyway and 1000x slower; the reference has identical
+    flops/bytes structure for the dry-run roofline).
+    """
+    k, n = pw.shape
+    lead = x.shape[:-1]
+    assert x.shape[-1] == k, (x.shape, pw.shape)
+    if not (force_pallas or on_tpu()):
+        # the reference dequantizes with tensor_scale already applied
+        y = ref.razer_matmul_ref(x.reshape(-1, k), pw)
+        return y.reshape(*lead, n).astype(x.dtype)
+
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+    bm, bn, bk = pick_blocks(m, n, k)
+    pad = (-m) % bm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    y = razer_matmul_pallas(
+        xf,
+        pw.codes,
+        pw.scale_meta,
+        m0=pw.sv_magnitudes[0],
+        m1=pw.sv_magnitudes[1],
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        interpret=bool(interpret) if interpret is not None else not on_tpu(),
+    )
+    y = y[:m] if pad else y
+    return (y * pw.tensor_scale).reshape(*lead, n).astype(x.dtype)
+
+
+def razer_act_qdq(x, *, svs=(5.0, -5.0), block: int = 16, force_pallas: bool = False, interpret: bool | None = None):
+    """Fused dynamic activation fake-quant over the last dim (any batch shape)."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    if not (force_pallas or on_tpu()):
+        return ref.razer_act_qdq_ref(x, svs=svs, block=block)
+    xf = x.reshape(-1, k)
+    m = xf.shape[0]
+    bm = _largest_divisor(m, (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    bk = _largest_divisor(k, (512, 256, 128, 64, 32, 16))
+    y = razer_act_qdq_pallas(
+        xf,
+        svs=tuple(svs),
+        block=block,
+        block_m=bm,
+        block_k=bk,
+        interpret=bool(interpret) if interpret is not None else not on_tpu(),
+    )
+    return y.reshape(*lead, k)
+
+
+def razer_kv_attention(q, cache, cur_len, *, force_pallas: bool = False, interpret: bool | None = None):
+    """Decode attention over a packed KV cache dict (serving.kvcache layout).
+
+    q: (B, 1, H, hd) or (B, H, hd) -> (B, 1, H, hd)."""
+    from .razer_kv_attention import razer_kv_attention_pallas
+
+    squeeze = q.ndim == 4
+    qf = q[:, 0] if squeeze else q
+    if not (force_pallas or on_tpu()):
+        out = ref.razer_kv_attention_ref(
+            qf, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"], cur_len)
+    else:
+        out = razer_kv_attention_pallas(
+            qf, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"],
+            jnp.asarray(cur_len, jnp.int32),
+            interpret=bool(interpret) if interpret is not None else not on_tpu())
+    out = out.astype(q.dtype)
+    return out[:, None] if squeeze else out

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: single-query (decode) attention over a RaZeR-packed KV
+cache -- the fused hot loop of the App. C.1 + §4.3 serving path that §Perf
+cells A/C showed to be the dominant-term win (2.1-2.7x).
+
+    out[b, h, :] = softmax(q[b, h, :] . K_hat[b, :len, kvh(h), :]) @ V_hat[...]
+
+where K_hat/V_hat are dequantized on the fly from the 4.5-bit wire format
+(two FP4 codes per byte + one E4M3-scale/SV-sign byte per 16-block).  The
+cache is streamed HBM -> VMEM in sequence chunks; the dequant (VPU arithmetic,
+no gathers) overlaps the (G, hd) x (hd, sc) MXU scores matmul; softmax is the
+online flash-decode accumulation carried in VMEM scratch.
+
+Grid: (B, KVH, S/sc) -- the S dimension is innermost/sequential so the
+running (m, l, acc) stay resident.  cur_len arrives as a scalar-prefetch
+operand for masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["razer_kv_attention_pallas"]
+
+
+def _decode_codes(packed):
+    """(sc, hd//2) u8 -> (sc, hd) FP4 codes (low nibble first)."""
+    lo = (packed & 0xF).astype(jnp.uint8)
+    hi = (packed >> 4).astype(jnp.uint8)
+    sc, half = packed.shape
+    return jnp.stack([lo, hi], axis=2).reshape(sc, half * 2)
+
+
+def _fp4_vals(codes, sv):
+    c = codes.astype(jnp.int32)
+    s = c >> 3
+    e = (c >> 1) & 0b11
+    m = (c & 1).astype(jnp.float32)
+    mag = jnp.where(e == 0, 0.5 * m, jnp.exp2((e - 1).astype(jnp.float32)) * (1.0 + 0.5 * m))
+    val = jnp.where(s == 1, -mag, mag)
+    return jnp.where(c == 8, sv, val)
+
+
+def _dequant_tile(codes_packed, meta, hd):
+    """codes (sc, hd//2) u8 + meta (sc, hd//16) u8 -> (sc, hd) f32."""
+    sc = codes_packed.shape[0]
+    codes = _decode_codes(codes_packed)  # (sc, hd)
+    scode = (meta & 0x7F).astype(jnp.int32)
+    sv_sign = (meta >> 7).astype(jnp.int32)
+    e = scode >> 3
+    mm = (scode & 7).astype(jnp.float32)
+    scale = jnp.where(
+        e == 0,
+        jnp.exp2(jnp.float32(-6)) * (mm / 8.0),
+        jnp.exp2((e - 7).astype(jnp.float32)) * (1.0 + mm / 8.0),
+    )  # (sc, hd//16)
+    sv = 5.0 * jnp.where(sv_sign == 1, -1.0, 1.0)
+    nblk = hd // 16
+    sv_e = jnp.broadcast_to(sv[:, :, None], (sc, nblk, 16)).reshape(sc, hd)
+    scale_e = jnp.broadcast_to(scale[:, :, None], (sc, nblk, 16)).reshape(sc, hd)
+    return _fp4_vals(codes, sv_e) * scale_e
+
+
+def _kernel(cur_len_ref, q_ref, kc_ref, km_ref, vc_ref, vm_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, sc, hd, nsteps_s):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur_len = cur_len_ref[pl.program_id(0)]  # per-sequence (continuous batching)
+    q = q_ref[...].astype(jnp.float32)  # (G, hd)
+    k = _dequant_tile(kc_ref[...], km_ref[...], hd)  # (sc, hd) f32
+    v = _dequant_tile(vc_ref[...], vm_ref[...], hd)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, sc)
+    pos = si * sc + jax.lax.broadcasted_iota(jnp.int32, (1, sc), 1)
+    s = jnp.where(pos < cur_len, s, -1e30)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(si == nsteps_s - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("seq_chunk", "interpret"))
+def razer_kv_attention_pallas(q, k_codes, k_meta, v_codes, v_meta, cur_len,
+                              *, seq_chunk: int = 512, interpret: bool = False):
+    """q: (B, H, hd); caches: (B, S, KVH, hd//2|hd//16) u8; cur_len: () or (B,) i32.
+
+    Returns (B, H, hd) f32.  H % KVH == 0; S % seq_chunk == 0."""
+    b, h, hd = q.shape
+    _, s, kvh, half = k_codes.shape
+    assert half * 2 == hd and h % kvh == 0 and s % min(seq_chunk, s) == 0
+    g = h // kvh
+    sc = min(seq_chunk, s)
+    grid = (b, kvh, s // sc)
+
+    qg = q.reshape(b, kvh, g, hd)
+    # (B, S, KVH, x) -> (B, KVH, S, x) so the S chunk is a contiguous block
+    kc = k_codes.transpose(0, 2, 1, 3)
+    km = k_meta.transpose(0, 2, 1, 3)
+    vc = v_codes.transpose(0, 2, 1, 3)
+    vm = v_meta.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, sc=sc, hd=hd, nsteps_s=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, None, g, hd), lambda bi, ki, si, cur: (bi, ki, 0, 0)),
+                pl.BlockSpec((None, None, sc, hd // 2), lambda bi, ki, si, cur: (bi, ki, si, 0)),
+                pl.BlockSpec((None, None, sc, hd // 16), lambda bi, ki, si, cur: (bi, ki, si, 0)),
+                pl.BlockSpec((None, None, sc, hd // 2), lambda bi, ki, si, cur: (bi, ki, si, 0)),
+                pl.BlockSpec((None, None, sc, hd // 16), lambda bi, ki, si, cur: (bi, ki, si, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, None, g, hd), lambda bi, ki, si, cur: (bi, ki, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,)), qg, kc, km, vc, vm)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact reference semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import PackedRazerWeight
+from repro.core.razer import razer_quantize
+
+__all__ = ["razer_matmul_ref", "razer_act_qdq_ref"]
+
+
+def razer_matmul_ref(x, pw: PackedRazerWeight, compute_dtype=jnp.float32):
+    """y = x @ dequant(pw), f32 accumulation."""
+    w = pw.dequantize().astype(compute_dtype)
+    return jnp.dot(x.astype(compute_dtype), w, preferred_element_type=jnp.float32)
+
+
+def razer_act_qdq_ref(x, svs=(5.0, -5.0), block: int = 16):
+    """Dynamic activation fake-quant: per-block E4M3 scale, no tensor scale."""
+    out = razer_quantize(
+        x.astype(jnp.float32),
+        special_values=svs,
+        block_size=block,
+        scale_fmt="e4m3",
+        axis=-1,
+        tensor_scale=jnp.asarray(1.0, jnp.float32),
+    ).dequantize()
+    return out.astype(x.dtype)
+
+
+def razer_kv_attention_ref(q, k_codes, k_meta, v_codes, v_meta, cur_len):
+    """Oracle: dequantize the whole cache, run single-query attention."""
+    from repro.models.attention import decode_attention
+    from repro.serving.kvcache import kv_dequantize
+
+    b, h, hd = q.shape
+    k = kv_dequantize(k_codes, k_meta, hd)  # (B, S, KVH, hd) f32
+    v = kv_dequantize(v_codes, v_meta, hd)
+    out = decode_attention(q[:, None].reshape(b, 1, h, hd).astype(jnp.float32), k, v, cur_len)
+    return out[:, 0]

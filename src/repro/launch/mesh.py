@@ -1,0 +1,26 @@
+"""Production mesh construction (brief-mandated shapes).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state, so tests/benches keep their 1-CPU view unless the caller
+explicitly builds a mesh (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many local devices exist (CPU tests)."""
+    n = len(jax.devices())
+    if shape == (1, 1) and n > 1:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes)

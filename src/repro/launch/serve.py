@@ -1,0 +1,80 @@
+"""Production serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3_8b --reduced \
+        --packed --kv-quant --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.qlinear import QuantConfig
+from repro.models import transformer as tf
+from repro.serving.engine import Engine, ServeConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--packed", action="store_true", help="RaZeR 4.5-bit packed weights")
+    ap.add_argument("--kv-quant", action="store_true", help="RaZeR KV cache (App. C.1)")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--ckpt", default=None, help="restore params from a training checkpoint dir")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    if args.ckpt:
+        from repro.train.checkpoint import restore_checkpoint
+
+        state = {"params": params}
+        try:
+            state, step = restore_checkpoint(args.ckpt, state)
+            params = state["params"]
+            print(f"restored params from step {step}")
+        except (KeyError, ValueError):
+            # checkpoint may hold {"params", "opt"}: restore params subtree only
+            full, step = restore_checkpoint(args.ckpt, {"params": params, "opt": None})
+            params = full["params"]
+
+    scfg = ServeConfig(
+        max_len=args.max_len,
+        max_new_tokens=args.max_new,
+        kv_quant=args.kv_quant,
+        quant=QuantConfig(mode="packed") if args.packed else QuantConfig(mode="bf16"),
+    )
+    eng = Engine(params, cfg, scfg)
+
+    rng = np.random.default_rng(0)
+    reqs = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 16))).tolist()
+            for _ in range(args.requests)]
+    if cfg.ssm or cfg.block_pattern:
+        reqs = [r[:4] for r in reqs]  # recurrent archs: equal lengths
+    extras = {}
+    if cfg.encoder_decoder:
+        import jax.numpy as jnp
+
+        extras["enc_frames"] = jnp.asarray(
+            rng.standard_normal((len(reqs), cfg.enc_frames, cfg.d_model)), jnp.bfloat16)
+
+    t0 = time.perf_counter()
+    out = eng.generate(reqs, extras=extras)
+    dt = time.perf_counter() - t0
+    new = sum(len(o) - len(r) for o, r in zip(out, reqs))
+    print(f"{new} tokens / {dt:.2f}s = {new / dt:.1f} tok/s "
+          f"(packed={args.packed}, kv_quant={args.kv_quant})")
+    for o, r in zip(out[:3], reqs[:3]):
+        print(f"  prompt[{len(r)}] -> {o[len(r):]}")
+
+
+if __name__ == "__main__":
+    main()

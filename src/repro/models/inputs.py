@@ -1,0 +1,86 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (dry-run) and real-array
+materializers (smoke tests) for every (arch x shape x kind) cell.
+
+The modality frontends are stubs per the brief: VLM cells get precomputed
+patch embeddings (replacing the leading N_IMG token positions), audio cells
+get precomputed conv-frontend frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+N_IMG_PATCHES = 256  # VLM stub: patches prepended into the sequence
+
+
+def train_input_specs(cfg: ArchConfig, seq_len: int, global_batch: int) -> Dict[str, Any]:
+    b, s = global_batch, seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend == "vision":
+        n = min(N_IMG_PATCHES, max(s // 4, 1))  # patches occupy a seq prefix
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct((b, n, cfg.d_model), jnp.bfloat16)
+        specs["positions3"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    if cfg.frontend == "audio":
+        specs["enc_frames"] = jax.ShapeDtypeStruct((b, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ArchConfig, seq_len: int, global_batch: int) -> Dict[str, Any]:
+    specs = train_input_specs(cfg, seq_len, global_batch)
+    del specs["labels"]
+    return specs
+
+
+def decode_input_specs(cfg: ArchConfig, seq_len: int, global_batch: int) -> Dict[str, Any]:
+    """One new token against caches holding `seq_len` context."""
+    from .transformer import init_caches
+
+    b = global_batch
+    caches = jax.eval_shape(lambda: init_caches(cfg, b, seq_len, jnp.bfloat16))
+    specs: Dict[str, Any] = {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "caches": caches,
+        "cur_len": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.encoder_decoder:
+        specs["enc"] = jax.ShapeDtypeStruct((b, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def input_specs(cfg: ArchConfig, shape: dict) -> Dict[str, Any]:
+    kind = shape["kind"]
+    if kind == "train":
+        return train_input_specs(cfg, shape["seq_len"], shape["global_batch"])
+    if kind == "prefill":
+        return prefill_input_specs(cfg, shape["seq_len"], shape["global_batch"])
+    if kind == "decode":
+        return decode_input_specs(cfg, shape["seq_len"], shape["global_batch"])
+    raise ValueError(kind)
+
+
+def materialize(specs, seed: int = 0, vocab: int = 256):
+    """Real random arrays matching a spec tree (smoke tests)."""
+    rng = np.random.default_rng(seed)
+
+    def make(path, s):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "positions3" in name:
+            # text-only default: t/h/w streams all equal arange (decode paths
+            # generate positions from cur_len -- must be consistent)
+            _, b, sq = s.shape
+            return jnp.broadcast_to(jnp.arange(sq, dtype=s.dtype), (3, b, sq))
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if s.shape == ():
+                return jnp.asarray(0, s.dtype)
+            return jnp.asarray(rng.integers(0, vocab, s.shape), s.dtype)
+        return jnp.asarray(rng.standard_normal(s.shape), s.dtype)
+
+    return jax.tree_util.tree_map_with_path(make, specs)

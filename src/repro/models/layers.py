@@ -1,0 +1,135 @@
+"""Shared neural-net layers (pure functional JAX, params = nested dicts).
+
+Conventions:
+  * params are float32 "master" copies; forward casts to cfg.compute_dtype.
+  * weights are (d_in, d_out) so the quantization reduction dim is axis 0,
+    matching core.qlinear / the packed kernel layout.
+  * every linear goes through qlinear() so a QuantConfig turns any model into
+    its fake-quant / packed counterpart.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantConfig, qlinear
+from repro.parallel.sharding import shard_activation
+
+DEFAULT_QUANT = QuantConfig(mode="bf16")
+
+
+def dense_init(key, d_in, d_out, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), dtype) * scale
+
+
+def rms_norm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd//2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd//2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 10000.0):
+    """Qwen2-VL M-RoPE: rotary frequencies partitioned into (t, h, w) sections.
+
+    x: (B, S, H, hd); positions3: (3, B, S) temporal/height/width position ids
+    (equal for text tokens); sections: e.g. (16, 24, 24) with sum = hd//2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)  # (hd//2,)
+    # pick the position stream per frequency index
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=hd // 2
+    )  # static (hd//2,)
+    pos = positions3[sec_id, :, :]  # (hd//2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, hd//2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(x, p, quant: QuantConfig = DEFAULT_QUANT):
+    h = jax.nn.silu(qlinear(x, p["gate"], quant)) * qlinear(x, p["up"], quant)
+    h = shard_activation(h, "ffn")
+    return qlinear(h, p["down"], quant)
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up_b": jnp.zeros((d_ff,), dtype),
+        "down": dense_init(k2, d_ff, d_model, dtype=dtype),
+        "down_b": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(x, p, quant: QuantConfig = DEFAULT_QUANT):
+    from repro.core.qlinear import QuantizedLinear
+
+    h = jax.nn.gelu(qlinear(x, QuantizedLinear(p["up"], p["up_b"]), quant))
+    h = shard_activation(h, "ffn")
+    return qlinear(h, QuantizedLinear(p["down"], p["down_b"]), quant)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab, d_model, dtype=jnp.float32):
+    return jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+
+
+def embed(tokens, table, compute_dtype=jnp.bfloat16):
+    return table.astype(compute_dtype)[tokens]
+
+
+def unembed(x, table, quant: QuantConfig = DEFAULT_QUANT):
+    """lm head; (vocab, d) table used transposed -- left unquantized by default
+    (the paper, like most PTQ work, keeps embeddings/lm_head high precision)."""
+    return x @ table.T.astype(x.dtype)

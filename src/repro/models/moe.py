@@ -1,0 +1,140 @@
+"""Token-choice top-k MoE with grouped, capacity-bounded dispatch.
+
+Formulation (DESIGN.md §6): tokens are split into G dispatch groups (vmapped);
+within a group, slot positions come from a cumsum over an (slots, E) one-hot --
+never a (tokens, E, capacity) tensor.  The dispatch buffer is
+(G, E, capacity, d): with G sharded on the data axis and expert weights'
+E dim sharded on the data axis too, XLA SPMD lowers the expert einsum to the
+canonical expert-parallel all-to-all (GSPMD MoE pattern).  Capacity overflow
+drops slots (GShard semantics); an aux load-balance loss is returned.
+
+DeepSeek-V2 style shared experts (always-on dense SwiGLU) are supported.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantConfig, qlinear
+from repro.parallel.sharding import get_ctx, shard_activation
+
+from .config import ArchConfig
+from .layers import DEFAULT_QUANT, dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, dtype=dtype),
+        "experts": {
+            "gate": jax.random.normal(ks[1], (e, d, f), dtype) * scale,
+            "up": jax.random.normal(ks[2], (e, d, f), dtype) * scale,
+            "down": jax.random.normal(ks[3], (e, f, d), dtype) * (1.0 / math.sqrt(f)),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, cfg.n_shared_experts * f, dtype=dtype)
+    return p
+
+
+def _pick_groups(t: int) -> int:
+    """Dispatch group count: matches the data-axis size when a mesh context is
+    active (so the group dim shards exactly); else a small divisor of t."""
+    ctx = get_ctx()
+    want = 16
+    if ctx is not None and ctx.data_axis:
+        want = ctx.axis_size(ctx.data_axis)
+        if ctx.batch_axes:
+            want = max(want, ctx.axis_size(ctx.batch_axes))
+    g = math.gcd(t, want)
+    return max(g, 1)
+
+
+def _group_dispatch(xg, topi, e: int, cap: int):
+    """Per-group dispatch (vmapped over G).
+
+    xg: (tg, d); topi: (tg, k). Returns (buf (e, cap, d), slot_expert,
+    slot_pos, slot_keep, slot_token) for the combine step.
+    """
+    tg, d = xg.shape
+    k = topi.shape[-1]
+    slot_expert = topi.reshape(-1)  # (tg*k,)
+    slot_token = jnp.repeat(jnp.arange(tg), k)
+    onehot = jax.nn.one_hot(slot_expert, e, dtype=jnp.int32)  # (tg*k, e)
+    pos = jnp.cumsum(onehot, axis=0) * onehot  # position+1 at own expert
+    slot_pos = jnp.sum(pos, axis=-1) - 1  # (tg*k,)
+    keep = slot_pos < cap
+    # dropped slots scatter into a sacrificial row at index `cap`
+    safe_pos = jnp.where(keep, slot_pos, cap)
+    buf = jnp.zeros((e, cap + 1, d), xg.dtype)
+    buf = buf.at[slot_expert, safe_pos].add(xg[slot_token])
+    return buf[:, :cap, :], slot_expert, safe_pos, keep, slot_token
+
+
+def _group_combine(h, slot_expert, slot_pos, keep, slot_token, topw, tg: int):
+    """h: (e, cap, d) expert outputs -> (tg, d) weighted combine."""
+    d = h.shape[-1]
+    k = topw.shape[-1]
+    h_pad = jnp.pad(h, ((0, 0), (0, 1), (0, 0)))  # restore sacrificial row
+    slots = h_pad[slot_expert, slot_pos]  # (tg*k, d)
+    w = topw.reshape(-1) * keep.astype(topw.dtype)
+    out = jnp.zeros((tg, d), h.dtype)
+    return out.at[slot_token].add(slots * w[:, None].astype(h.dtype))
+
+
+def moe_forward(
+    x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Router kept f32 (DESIGN.md §4)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.topk
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (t, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style aux load-balance loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    g = _pick_groups(t)
+    tg = t // g
+    cap = max(int(math.ceil(tg * k / e * cfg.capacity_factor)), 1)
+
+    xg = xf.reshape(g, tg, d)
+    tig = topi.reshape(g, tg, k)
+    twg = topw.reshape(g, tg, k).astype(x.dtype)
+
+    buf, se, sp, keep, st = jax.vmap(_group_dispatch, in_axes=(0, 0, None, None))(
+        xg, tig, e, cap
+    )
+    buf = shard_activation(buf, "moe_buf")  # (g, e, cap, d)
+
+    we = p["experts"]
+    if quant.mode == "fakequant":
+        from repro.core.qlinear import _FORMATS, _format_kwargs
+
+        qfn = _FORMATS[quant.weight_format]
+        kw = _format_kwargs(quant, weight=True)
+        we = {k_: qfn(v.astype(jnp.float32), axis=1, **kw).dequantize() for k_, v in we.items()}
+    hg = jnp.einsum("gecd,edf->gecf", buf, we["gate"].astype(buf.dtype))
+    hu = jnp.einsum("gecd,edf->gecf", buf, we["up"].astype(buf.dtype))
+    h = jax.nn.silu(hg) * hu
+    hout = jnp.einsum("gecf,efd->gecd", h, we["down"].astype(buf.dtype))
+    hout = shard_activation(hout, "moe_buf")
+
+    yg = jax.vmap(_group_combine, in_axes=(0, 0, 0, 0, 0, 0, None))(hout, se, sp, keep, st, twg, tg)
+    y = yg.reshape(b, s, d)
+
+    if "shared" in p:
+        y = y + swiglu(x, p["shared"], quant)
+    return y, aux

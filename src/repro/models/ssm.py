@@ -1,0 +1,253 @@
+"""State-space blocks: Mamba-2 SSD (chunked) and RG-LRU (RecurrentGemma).
+
+Both provide a full-sequence path (train/prefill; SSD uses the chunked
+state-space-duality algorithm, RG-LRU uses an associative scan) and an O(1)
+single-step decode path carrying a recurrent state -- this is what makes the
+``long_500k`` shape runnable for these families (DESIGN.md §4).
+
+Per DESIGN.md §4, RaZeR quantization applies to the projection GEMMs; the
+recurrent state itself stays in the compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantConfig, qlinear
+
+from .config import ArchConfig
+from .layers import DEFAULT_QUANT, dense_init, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+def mamba2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    return d_inner, nheads
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    d_inner, nheads = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * n + nheads  # z, x, B, C, dt
+    conv_dim = d_inner + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, d_in_proj, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dtype),
+        "D": jnp.ones((nheads,), dtype),
+        "dt_bias": jnp.zeros((nheads,), dtype),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq: x (B,S,C), w (K,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """x_t (B,C); conv_state (B,K-1,C) holds the last K-1 inputs."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", full, w) + b
+    return out, full[:, 1:, :]
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    d_inner, nheads = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt
+
+
+def _ssd_chunked(xh, bmat, cmat, dt, a_log, chunk: int):
+    """Chunked SSD (Mamba-2 §6): xh (B,S,H,P), b/c (B,S,N), dt (B,S,H),
+    a_log (H,) -> y (B,S,H,P) plus final state (B,H,P,N)."""
+    bsz, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    a = -jnp.exp(a_log.astype(jnp.float32))  # (H,) negative
+    dt = dt.astype(jnp.float32)
+    da = dt * a  # (B,S,H) log-decay per step
+
+    xw = (xh.astype(jnp.float32) * dt[..., None]).reshape(bsz, nc, q, h, p)
+    bm = bmat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cm = cmat.astype(jnp.float32).reshape(bsz, nc, q, n)
+    dac = da.reshape(bsz, nc, q, h)
+    cs = jnp.cumsum(dac, axis=2)  # within-chunk cumulative log decay
+
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j.  Mask the *exponent*
+    # (not the exp) so the backward pass never sees inf * 0 = nan.
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,q,q,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    li = jnp.where(tri[None, None, :, :, None], li, -jnp.inf)
+    l = jnp.exp(li)
+    cb = jnp.einsum("bcin,bcjn->bcij", cm, bm)  # (B,nc,q,q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, l, xw)
+
+    # chunk summaries: S_c = sum_j exp(cs_last - cs_j) * B_j (x) xw_j
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # (B,nc,q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bm, decay_to_end, xw)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # (B,nc,H) total decay of a chunk
+
+    def scan_fn(hstate, inp):
+        dec, s_c = inp  # (B,H), (B,H,P,N)
+        h_out = hstate  # state BEFORE this chunk
+        hstate = hstate * dec[:, :, None, None] + s_c
+        return hstate, h_out
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, h_before = jax.lax.scan(
+        scan_fn,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_chunk, 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)  # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_i += exp(cs_i) * C_i . H_before
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", cm, jnp.exp(cs), h_before)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def mamba2_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT):
+    """Full-sequence Mamba-2 block. x: (B, S, d_model)."""
+    bsz, s, _ = x.shape
+    d_inner, nheads = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = qlinear(x, p["in_proj"], quant)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype)))
+    xi = xbc[..., :d_inner].reshape(bsz, s, nheads, cfg.ssm_head_dim)
+    bmat = xbc[..., d_inner : d_inner + n]
+    cmat = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    y, _ = _ssd_chunked(xi, bmat, cmat, dt, p["A_log"], cfg.ssm_chunk)
+    y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return qlinear(y, p["out_proj"], quant)
+
+
+def mamba2_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_inner, nheads = mamba2_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(x, p, cfg: ArchConfig, state, *, quant: QuantConfig = DEFAULT_QUANT):
+    """One-token step. x: (B, 1, d_model) -> (y, state)."""
+    bsz = x.shape[0]
+    d_inner, nheads = mamba2_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = qlinear(x[:, 0, :], p["in_proj"], quant)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_state = _conv_step(xbc, state["conv"], p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xbc = jax.nn.silu(xbc)
+    xi = xbc[..., :d_inner].reshape(bsz, nheads, cfg.ssm_head_dim)
+    bmat = xbc[..., d_inner : d_inner + n].astype(jnp.float32)
+    cmat = xbc[..., d_inner + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B,H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xi.astype(jnp.float32), bmat, dt)
+    h = state["h"] * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, cmat)
+    y = y + xi.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    y = qlinear(y, p["out_proj"], quant)
+    return y[:, None, :], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+def rglru_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], cfg.d_model, w, dtype=dtype),  # x branch
+        "w_gate": dense_init(ks[1], cfg.d_model, w, dtype=dtype),  # gelu gate branch
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_kernel, w), dtype) * 0.1,
+        "conv_b": jnp.zeros((w,), dtype),
+        "wa": dense_init(ks[3], w, w, dtype=dtype),  # recurrence gate r_t
+        "wx": dense_init(ks[4], w, w, dtype=dtype),  # input gate i_t
+        "a_param": jnp.full((w,), 2.0, dtype),  # Lambda: a = sigmoid(2.0) ~ 0.88
+        "out_proj": dense_init(ks[5], w, cfg.d_model, dtype=dtype),
+    }
+
+
+_RGLRU_C = 8.0
+
+
+def _rglru_gates(xb, p, quant):
+    r = jax.nn.sigmoid(qlinear(xb, p["wa"], quant).astype(jnp.float32))
+    i = jax.nn.sigmoid(qlinear(xb, p["wx"], quant).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["a_param"].astype(jnp.float32))  # log a in (-inf,0)
+    log_at = _RGLRU_C * r * log_a_base  # (..., w)
+    at = jnp.exp(log_at)
+    gated_x = i * xb.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - at**2, 1e-12))
+    return at, beta * gated_x
+
+
+def rglru_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT):
+    """Full-sequence Griffin recurrent block. x: (B, S, d_model)."""
+    gate = jax.nn.gelu(qlinear(x, p["w_gate"], quant))
+    xb = qlinear(x, p["w_in"], quant)
+    xb = _causal_conv(xb, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    at, bt = _rglru_gates(xb, p, quant)
+    # h_t = a_t h_{t-1} + b_t  -- associative scan over S
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (at, bt), axis=1)
+    h = b_s.astype(x.dtype)
+    y = h * gate
+    return qlinear(y, p["out_proj"], quant)
+
+
+def rglru_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype),
+    }
+
+
+def rglru_decode(x, p, cfg: ArchConfig, state, *, quant: QuantConfig = DEFAULT_QUANT):
+    """One-token step. x: (B, 1, d_model) -> (y, state)."""
+    xt = x[:, 0, :]
+    gate = jax.nn.gelu(qlinear(xt, p["w_gate"], quant))
+    xb = qlinear(xt, p["w_in"], quant)
+    xb, conv_state = _conv_step(xb, state["conv"], p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    at, bt = _rglru_gates(xb, p, quant)
+    h = at * state["h"] + bt
+    y = (h.astype(x.dtype)) * gate
+    y = qlinear(y, p["out_proj"], quant)
+    return y[:, None, :], {"h": h, "conv": conv_state}

@@ -1,0 +1,535 @@
+"""Model assembly: decoder-only LMs (dense / MoE / SSM / hybrid / VLM) and the
+whisper-style encoder-decoder, built from the layer library.
+
+Layers are organized into *groups* of consecutive identical block types; each
+group is a lax.scan over stacked parameters (MaxText-style) so HLO size stays
+bounded for 60+ layer models at 512-way SPMD.  Block types:
+
+    'a' : attention (GQA or MLA) + dense MLP
+    'm' : attention + MoE (+ shared experts)
+    's' : Mamba-2 SSD mixer only
+    'r' : RG-LRU temporal block + MLP
+    'c' : decoder block with cross-attention (whisper)
+
+Three entry points per model:  forward_train (full seq, causal),
+prefill (returns KV caches/states), decode_step (one token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qlinear import QuantConfig
+from repro.parallel.sharding import shard_activation
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ArchConfig
+from .layers import (
+    DEFAULT_QUANT,
+    embed,
+    embedding_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    rms_norm,
+    swiglu,
+    swiglu_init,
+    unembed,
+)
+
+AUX_COEF = 0.01
+
+# When True, layer scans are unrolled python loops.  The dry-run's costing
+# pass uses this: XLA's cost_analysis counts a while-loop body ONCE regardless
+# of trip count (verified empirically), so exact HLO flops/bytes/collective
+# totals require an unrolled lowering.  Default False (compile-time friendly).
+import contextvars
+
+UNROLL_SCANS = contextvars.ContextVar("UNROLL_SCANS", default=False)
+
+# Remat policy for the train-path layer scan (perf-iteration knob, §Perf):
+#   "full"  -- save nothing, recompute the whole layer in backward (min memory)
+#   "dots"  -- save matmul outputs, recompute elementwise only (less recompute
+#              flops, more memory; XLA offloads nothing on TPU v5e)
+#   "none"  -- no remat (max memory, min flops)
+REMAT_POLICY = contextvars.ContextVar("REMAT_POLICY", default="full")
+
+_REMAT_POLICIES = {
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _scan(body, carry, xs):
+    """lax.scan or an unrolled python loop over the leading axis of xs."""
+    if not UNROLL_SCANS.get():
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree_util.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# layer grouping
+# ---------------------------------------------------------------------------
+def layer_groups(cfg: ArchConfig) -> List[Tuple[str, int]]:
+    """[(block_type, count)] for consecutive same-type runs."""
+    types = list(cfg.layer_types)
+    if cfg.moe:
+        nd = cfg.first_dense_layers
+        types = ["a"] * nd + ["m"] * (cfg.num_layers - nd)
+    if cfg.encoder_decoder:
+        types = ["c"] * cfg.num_layers  # decoder blocks carry cross-attention
+    groups: List[Tuple[str, int]] = []
+    for t in types:
+        if groups and groups[-1][0] == t:
+            groups[-1] = (t, groups[-1][1] + 1)
+        else:
+            groups.append((t, 1))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / forward
+# ---------------------------------------------------------------------------
+def _mixer_init(key, cfg: ArchConfig, ltype: str, dtype):
+    if ltype in ("a", "m", "c"):
+        return attn.mla_init(key, cfg, dtype) if cfg.mla else attn.gqa_init(key, cfg, dtype)
+    if ltype == "s":
+        return ssm_mod.mamba2_init(key, cfg, dtype)
+    if ltype == "r":
+        return ssm_mod.rglru_init(key, cfg, dtype)
+    raise ValueError(ltype)
+
+
+def _layer_init(key, cfg: ArchConfig, ltype: str, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    p["mixer"] = _mixer_init(ks[0], cfg, ltype, dtype)
+    if ltype in ("a", "r", "c"):
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        if cfg.act_fn == "gelu":
+            p["mlp"] = gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["mlp"] = swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if ltype == "m":
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+    if ltype == "c":
+        p["ln_x"] = jnp.zeros((cfg.d_model,), dtype)
+        p["xattn"] = attn.cross_init(ks[3], cfg, dtype)
+    return p
+
+
+def _mlp_fwd(x, p, cfg: ArchConfig, quant):
+    fn = gelu_mlp if cfg.act_fn == "gelu" else swiglu
+    return fn(x, p["mlp"], quant)
+
+
+def _layer_fwd(x, lp, cfg: ArchConfig, ltype: str, quant, positions, positions3, enc=None):
+    """Full-sequence layer. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if ltype in ("a", "m", "c"):
+        if cfg.mla:
+            mix = attn.mla_forward(h, lp["mixer"], cfg, quant=quant, positions=positions)
+        else:
+            win = cfg.window if (ltype == "a" and cfg.block_pattern) else 0
+            mix = attn.gqa_forward(h, lp["mixer"], cfg, quant=quant, positions=positions,
+                                   positions3=positions3, window=win)
+    elif ltype == "s":
+        mix = ssm_mod.mamba2_forward(h, lp["mixer"], cfg, quant=quant)
+    elif ltype == "r":
+        mix = ssm_mod.rglru_forward(h, lp["mixer"], cfg, quant=quant)
+    else:
+        raise ValueError(ltype)
+    x = x + mix
+    x = shard_activation(x, "resid")
+    if ltype == "c" and enc is not None:
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        x = x + attn.cross_forward(hx, enc, lp["xattn"], cfg, quant=quant)
+    if ltype == "m":
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, aux = moe_mod.moe_forward(h2, lp["moe"], cfg, quant=quant)
+        x = x + y
+    elif ltype in ("a", "r", "c"):
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mlp_fwd(h2, lp, cfg, quant)
+    x = shard_activation(x, "resid")
+    return x, aux
+
+
+def _cache_init(cfg: ArchConfig, ltype: str, batch: int, max_len: int, dtype):
+    if ltype in ("a", "m", "c"):
+        if cfg.mla:
+            return attn.mla_cache_init(cfg, batch, max_len, dtype)
+        return attn.gqa_cache_init(cfg, batch, max_len, dtype)
+    if ltype == "s":
+        return ssm_mod.mamba2_state_init(cfg, batch, dtype=dtype)
+    if ltype == "r":
+        return ssm_mod.rglru_state_init(cfg, batch, dtype=dtype)
+    raise ValueError(ltype)
+
+
+def _layer_decode(x, lp, cache, cur_len, cfg: ArchConfig, ltype: str, quant, enc=None, positions3=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if ltype in ("a", "m", "c"):
+        if cfg.mla:
+            mix, cache = attn.mla_decode(h, lp["mixer"], cfg, cache, cur_len, quant=quant)
+        else:
+            win = cfg.window if (ltype == "a" and cfg.block_pattern) else 0
+            mix, cache = attn.gqa_decode(h, lp["mixer"], cfg, cache, cur_len, quant=quant,
+                                         window=win, positions3=positions3)
+    elif ltype == "s":
+        mix, cache = ssm_mod.mamba2_decode(h, lp["mixer"], cfg, cache, quant=quant)
+    elif ltype == "r":
+        mix, cache = ssm_mod.rglru_decode(h, lp["mixer"], cfg, cache, quant=quant)
+    x = x + mix
+    if ltype == "c" and enc is not None:
+        hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        x = x + attn.cross_forward(hx, enc, lp["xattn"], cfg, quant=quant)
+    if ltype == "m":
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = moe_mod.moe_forward(h2, lp["moe"], cfg, quant=quant)
+        x = x + y
+    elif ltype in ("a", "r", "c"):
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mlp_fwd(h2, lp, cfg, quant)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def _stack_init(key, cfg, ltype, count, dtype):
+    keys = jax.random.split(key, count)
+    layers = [_layer_init(k, cfg, ltype, dtype) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, len(layer_groups(cfg)) + 4)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embedding_init(ks[1], cfg.vocab_size, cfg.d_model, dtype)
+    for gi, (ltype, count) in enumerate(layer_groups(cfg)):
+        p[f"layers_{gi}"] = _stack_init(ks[2 + gi], cfg, ltype, count, dtype)
+    if cfg.encoder_decoder:
+        ek = jax.random.split(ks[-1], 3)
+        p["enc_layers"] = _stack_init(ek[0], cfg, "a", cfg.enc_layers, dtype)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# whisper encoder (frames are the conv-frontend stub output)
+# ---------------------------------------------------------------------------
+def _sinusoid(s: int, d: int):
+    pos = jnp.arange(s)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def encode(params, frames, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT):
+    """frames: (B, S_enc, d_model) precomputed frame embeddings (stub)."""
+    b, s, _ = frames.shape
+    x = frames.astype(cfg.cdtype) + _sinusoid(s, cfg.d_model).astype(cfg.cdtype)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(carry, lp):
+        x, = carry
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        # bidirectional: rope-less (cfg.use_rope=False) non-causal attention
+        mix = attn.gqa_forward(h, lp["mixer"], cfg, quant=quant, positions=positions, causal=False)
+        x = x + mix
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _mlp_fwd(h2, lp, cfg, quant)
+        return (x,), None
+
+    (x,), _ = _scan(body, (x,), params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / eval)
+# ---------------------------------------------------------------------------
+def forward_hidden(
+    params,
+    tokens,
+    cfg: ArchConfig,
+    quant: QuantConfig = DEFAULT_QUANT,
+    *,
+    positions3=None,
+    frontend_embeds=None,
+    enc_frames=None,
+):
+    """tokens: (B, S) -> (final hidden states (B, S, d), aux_loss)."""
+    b, s = tokens.shape
+    x = embed(tokens, params["embed"], cfg.cdtype)
+    if frontend_embeds is not None:
+        # VLM stub: precomputed patch embeddings replace the leading positions
+        x = jax.lax.dynamic_update_slice(x, frontend_embeds.astype(x.dtype), (0, 0, 0))
+    x = shard_activation(x, "resid")
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc = None
+    if cfg.encoder_decoder:
+        assert enc_frames is not None, "whisper needs encoder frames"
+        enc = encode(params, enc_frames, cfg, quant)
+        x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, (ltype, count) in enumerate(layer_groups(cfg)):
+        lt = ltype
+
+        policy = REMAT_POLICY.get()
+
+        def _plain_layer(x, lp, _lt=lt):
+            return _layer_fwd(x, lp, cfg, _lt, quant, positions, positions3, enc=enc)
+
+        if policy == "none":
+            _ckpt_layer = _plain_layer
+        else:
+            # per-layer remat (MaxText-style): backward recomputes the layer
+            # from its input; temp memory = O(1 layer) not O(L layers)
+            _ckpt_layer = jax.checkpoint(_plain_layer, policy=_REMAT_POLICIES[policy])
+
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _ckpt_layer(x, lp)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = _scan(body, (x, aux_total), params[f"layers_{gi}"])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux_total
+
+
+def forward_train(params, tokens, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT, **kw):
+    """tokens: (B, S) -> (logits (B, S, V), aux_loss)."""
+    x, aux_total = forward_hidden(params, tokens, cfg, quant, **kw)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head)
+    logits = shard_activation(logits, "logits")
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode_step
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    caches = []
+    for ltype, count in layer_groups(cfg):
+        one = _cache_init(cfg, ltype, batch, max_len, dtype)
+        caches.append(jax.tree_util.tree_map(lambda x: jnp.stack([x] * count), one))
+    return caches
+
+
+def prefill(params, tokens, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT,
+            *, max_len: int, positions3=None, frontend_embeds=None, enc_frames=None,
+            last_positions=None):
+    """Run the full prompt, building KV caches/states.
+
+    Returns (last_logits (B, V), caches, enc) -- enc is the encoder output to
+    reuse at decode time (whisper) or None.  ``last_positions`` (B,) gives each
+    sequence's true prompt length for ragged batches (continuous-batching
+    lite): logits are gathered at position length-1 per sequence.
+    """
+    b, s = tokens.shape
+    x = embed(tokens, params["embed"], cfg.cdtype)
+    if frontend_embeds is not None:
+        x = jax.lax.dynamic_update_slice(x, frontend_embeds.astype(x.dtype), (0, 0, 0))
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    enc = None
+    if cfg.encoder_decoder:
+        enc = encode(params, enc_frames, cfg, quant)
+        x = x + _sinusoid(s, cfg.d_model).astype(x.dtype)
+
+    caches = []
+    for gi, (ltype, count) in enumerate(layer_groups(cfg)):
+        lt = ltype
+
+        def body(carry, lp, _lt=lt):
+            x, = carry
+            xin = x
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            # mixer full-seq + cache extraction
+            if _lt in ("a", "m", "c"):
+                if cfg.mla:
+                    mix = attn.mla_forward(h, lp["mixer"], cfg, quant=quant, positions=positions)
+                    c, kr = attn._mla_ckv(h, lp["mixer"], cfg, quant, positions)
+                    cache = attn.mla_cache_init(cfg, b, max_len, cfg.cdtype)
+                    cache = {
+                        "c": jax.lax.dynamic_update_slice_in_dim(cache["c"], c.astype(cache["c"].dtype), 0, axis=1),
+                        "kr": jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr.astype(cache["kr"].dtype), 0, axis=1),
+                    }
+                else:
+                    win = cfg.window if (_lt == "a" and cfg.block_pattern) else 0
+                    q, k, v = attn._qkv(h, lp["mixer"], cfg, quant, positions, positions3)
+                    mix_raw = attn.chunked_attention(q, k, v, causal=True, window=win)
+                    from repro.core.qlinear import qlinear as _ql
+
+                    mix = _ql(mix_raw.reshape(b, s, -1), lp["mixer"]["wo"], quant)
+                    cache = attn.gqa_cache_init(cfg, b, max_len, cfg.cdtype)
+                    cache = {
+                        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+                        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+                    }
+                x = xin + mix
+            elif _lt == "s":
+                mix, cache = _mamba_prefill(h, lp["mixer"], cfg, quant)
+                x = xin + mix
+            elif _lt == "r":
+                mix, cache = _rglru_prefill(h, lp["mixer"], cfg, quant)
+                x = xin + mix
+            if _lt == "c" and enc is not None:
+                hx = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+                x = x + attn.cross_forward(hx, enc, lp["xattn"], cfg, quant=quant)
+            if _lt == "m":
+                h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                y, _ = moe_mod.moe_forward(h2, lp["moe"], cfg, quant=quant)
+                x = x + y
+            elif _lt in ("a", "r", "c"):
+                h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + _mlp_fwd(h2, lp, cfg, quant)
+            return (x,), cache
+
+        (x,), cache_stack = _scan(body, (x,), params[f"layers_{gi}"])
+        caches.append(cache_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if last_positions is not None:
+        idx = (jnp.asarray(last_positions, jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    else:
+        x_last = x[:, -1:, :]
+    last = unembed(x_last, head)[:, 0, :]
+    return last, caches, enc
+
+
+def _mamba_prefill(h, mp, cfg, quant):
+    """Mamba full-seq forward that also returns the decode state."""
+    b, s, _ = h.shape
+    d_inner, nheads = ssm_mod.mamba2_dims(cfg)
+    n = cfg.ssm_state
+    from repro.core.qlinear import qlinear as _ql
+
+    zxbcdt = _ql(h, mp["in_proj"], quant)
+    z, xbc, dt = ssm_mod._split_proj(zxbcdt, cfg)
+    conv_tail = xbc[:, -(cfg.conv_kernel - 1) :, :]
+    xbc = jax.nn.silu(ssm_mod._causal_conv(xbc, mp["conv_w"].astype(h.dtype), mp["conv_b"].astype(h.dtype)))
+    xi = xbc[..., :d_inner].reshape(b, s, nheads, cfg.ssm_head_dim)
+    bmat = xbc[..., d_inner : d_inner + n]
+    cmat = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"].astype(jnp.float32))
+    y, final_state = ssm_mod._ssd_chunked(xi, bmat, cmat, dt, mp["A_log"], cfg.ssm_chunk)
+    y = y + xi.astype(jnp.float32) * mp["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(h.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, mp["norm"], cfg.norm_eps)
+    out = _ql(y, mp["out_proj"], quant)
+    return out, {"h": final_state, "conv": conv_tail.astype(h.dtype)}
+
+
+def _rglru_prefill(h, mp, cfg, quant):
+    b, s, _ = h.shape
+    from repro.core.qlinear import qlinear as _ql
+
+    gate = jax.nn.gelu(_ql(h, mp["w_gate"], quant))
+    xb = _ql(h, mp["w_in"], quant)
+    conv_tail = xb[:, -(cfg.conv_kernel - 1) :, :]
+    xb = ssm_mod._causal_conv(xb, mp["conv_w"].astype(h.dtype), mp["conv_b"].astype(h.dtype))
+    at, bt = ssm_mod._rglru_gates(xb, mp, quant)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (at, bt), axis=1)
+    y = b_s.astype(h.dtype) * gate
+    out = _ql(y, mp["out_proj"], quant)
+    return out, {"h": b_s[:, -1, :], "conv": conv_tail.astype(h.dtype)}
+
+
+def decode_step(params, token, caches, cur_len, cfg: ArchConfig,
+                quant: QuantConfig = DEFAULT_QUANT, *, enc=None, positions3=None):
+    """token: (B,) int32 -> (logits (B, V), new caches)."""
+    b = token.shape[0]
+    x = embed(token[:, None], params["embed"], cfg.cdtype)
+    if cfg.encoder_decoder:
+        d = cfg.d_model
+        pos_emb = _sinusoid_at(cur_len, d).astype(x.dtype)
+        x = x + pos_emb[None, None, :]
+
+    new_caches = []
+    for gi, (ltype, count) in enumerate(layer_groups(cfg)):
+        lt = ltype
+
+        def body(carry, lp_cache, _lt=lt):
+            x, = carry
+            lp, cache = lp_cache
+            x, cache = _layer_decode(x, lp, cache, cur_len, cfg, _lt, quant, enc=enc,
+                                     positions3=positions3)
+            return (x,), cache
+
+        (x,), cache_stack = _scan(body, (x,), (params[f"layers_{gi}"], caches[gi]))
+        new_caches.append(cache_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head)[:, 0, :]
+    return logits, new_caches
+
+
+def _sinusoid_at(pos, d: int):
+    dim = jnp.arange(d // 2).astype(jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def lm_loss(params, batch, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT):
+    """batch: dict(tokens (B,S), labels (B,S), [mask, frontend_embeds, enc_frames]).
+
+    Memory-lean xent: loss = logsumexp(logits) - <x, head[label]>.  The only
+    (B,S,V) tensor is the bf16 logits feeding a fused logsumexp; the label
+    logit comes from a (B,S,d) gather of the head rows, never a second
+    vocab-sized buffer (matters at V=152k x S=4k x B=256)."""
+    x, aux = forward_hidden(
+        params,
+        batch["tokens"],
+        cfg,
+        quant,
+        positions3=batch.get("positions3"),
+        frontend_embeds=batch.get("frontend_embeds"),
+        enc_frames=batch.get("enc_frames"),
+    )
+    labels = batch["labels"]
+    head = (params["embed"] if cfg.tie_embeddings else params["lm_head"]).astype(x.dtype)
+    logits = x @ head.T
+    logits = shard_activation(logits, "logits")
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)  # (B,S)
+    label_emb = head[labels]  # (B,S,d) -- sharded gather, no (B,S,V) buffer
+    ll = jnp.einsum("bsd,bsd->bs", x, label_emb, preferred_element_type=jnp.float32)
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + AUX_COEF * aux, {"xent": loss, "aux": aux}

@@ -1,0 +1,53 @@
+"""Quantized collectives (beyond-paper distributed-optimization trick,
+DESIGN.md §2): move FSDP/EP payloads over ICI in the RaZeR 4.5-bit wire
+format instead of bf16 — ~3.56x less link traffic for weight all-gathers,
+at RaZeR (not NVFP4) accuracy for the same bytes.
+
+Usable inside shard_map-ped compute or called collectively via pjit; the
+quantize/dequantize halves are the same bit-exact primitives the serving
+engine uses, so the wire format is identical to the storage format (a
+gathered shard can be fed straight into the packed kernel).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.kvcache import kv_dequantize, kv_quantize
+
+__all__ = ["wire_encode", "wire_decode", "quantized_all_gather"]
+
+
+def wire_encode(x) -> Tuple[jnp.ndarray, jnp.ndarray, Tuple[int, ...]]:
+    """Flatten to blocks of 16 and pack to (codes u8, meta u8).
+
+    The trailing dim must be a multiple of 16 (all shard dims in this repo
+    are multiples of 256).  Returns (codes, meta, orig_shape)."""
+    shape = x.shape
+    flat = x.reshape(-1, shape[-1])
+    codes, meta = kv_quantize(flat)
+    return codes, meta, shape
+
+
+def wire_decode(codes, meta, shape, dtype=jnp.bfloat16):
+    hd = shape[-1]
+    out = kv_dequantize(codes, meta, hd)
+    return out.reshape(shape).astype(dtype)
+
+
+def quantized_all_gather(x, axis_name: str, *, tiled: bool = True):
+    """all_gather(x) where the wire payload is 4.5-bit RaZeR instead of bf16.
+
+    For a shard of S bytes in bf16, the link moves 0.28125*S bytes.  The
+    result is the *quantized-dequantized* gather (RaZeR-accuracy weights --
+    by construction identical numerics to serving from packed weights)."""
+    codes, meta, shape = wire_encode(x)
+    g_codes = jax.lax.all_gather(codes, axis_name, tiled=tiled)
+    g_meta = jax.lax.all_gather(meta, axis_name, tiled=tiled)
+    # tiled gather concatenates along dim 0 of the flattened (rows, cols) view
+    rows = g_codes.shape[0]
+    full = wire_decode(g_codes, g_meta, (rows, shape[-1]), dtype=x.dtype)
+    factor = rows // x.reshape(-1, shape[-1]).shape[0]
+    return full.reshape((shape[0] * factor,) + tuple(shape[1:]))

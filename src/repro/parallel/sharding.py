@@ -1,0 +1,217 @@
+"""Divisibility-aware sharding: parameter rules + activation constraints.
+
+Design (DESIGN.md §5): model code is mesh-agnostic.  A thread-local sharding
+context (set by trainstep/servestep/dryrun) carries the mesh + axis roles;
+``shard_activation(x, kind)`` applies a constraint only when a context is
+active, and the parameter resolver assigns PartitionSpecs by tensor-name rules
+with per-dimension divisibility checks, falling back to replication instead of
+failing -- this is what lets every (arch x shape x mesh) cell compile.
+
+Axis roles:
+  * "data"  -- batch / FSDP / expert-parallel axis (size 16 per pod)
+  * "model" -- tensor-parallel axis (size 16)
+  * "pod"   -- inter-pod pure data parallelism (multi-pod mesh only)
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "sharding_ctx",
+    "shard_activation",
+    "param_spec",
+    "param_sharding_tree",
+    "input_sharding",
+    "get_ctx",
+    "P",
+]
+
+_local = threading.local()
+
+
+class _Ctx:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        self.batch_axes = tuple(a for a in ("pod", "data") if a in names)
+        self.model_axis = "model" if "model" in names else None
+        self.data_axis = "data" if "data" in names else None
+
+    def axis_size(self, name) -> int:
+        if name is None:
+            return 1
+        if isinstance(name, tuple):
+            return int(np.prod([self.axis_size(a) for a in name]))
+        return self.mesh.shape[name]
+
+
+def get_ctx() -> Optional[_Ctx]:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh]):
+    prev = getattr(_local, "ctx", None)
+    _local.ctx = _Ctx(mesh) if mesh is not None else None
+    try:
+        yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+# ---------------------------------------------------------------------------
+# activation constraints
+# ---------------------------------------------------------------------------
+_ACT_KINDS = {
+    # (batch_dim_axes, seq_dim_axis, last_dim_axis). "seq->model" is
+    # Megatron-style sequence parallelism: residuals/norms live seq-sharded;
+    # XLA inserts the all-gather/reduce-scatter pair around attention & MLP.
+    "resid": ("batch", "model", None),
+    "ffn": ("batch", None, "model"),
+    "logits": ("batch", "model", None),
+    "heads": ("batch", None, None),
+    "moe_buf": ("batch", None, "model"),  # (G, E, cap, d): G on data, d on model
+}
+# toggled by perf experiments (EXPERIMENTS.md §Perf): None => use _ACT_KINDS
+_OVERRIDES: dict = {}
+
+
+def set_activation_rule(kind: str, rule):
+    """Perf-iteration hook: override an activation-sharding rule at runtime."""
+    if rule is None:
+        _OVERRIDES.pop(kind, None)
+    else:
+        _OVERRIDES[kind] = rule
+
+
+def shard_activation(x, kind: str):
+    ctx = get_ctx()
+    if ctx is None or ctx.mesh is None:
+        return x
+    batch_kind, seq_kind, last_kind = _OVERRIDES.get(kind) or _ACT_KINDS.get(
+        kind, ("batch", None, None)
+    )
+    axes: list = [None] * x.ndim
+    if batch_kind == "batch" and ctx.batch_axes:
+        bsz = ctx.axis_size(ctx.batch_axes)
+        if x.shape[0] % bsz == 0:
+            axes[0] = ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]
+    if seq_kind == "model" and ctx.model_axis and x.ndim >= 3:
+        if x.shape[1] % ctx.axis_size(ctx.model_axis) == 0:
+            axes[1] = ctx.model_axis
+    if last_kind == "model" and ctx.model_axis and x.ndim >= 2:
+        if x.shape[-1] % ctx.axis_size(ctx.model_axis) == 0:
+            axes[-1] = ctx.model_axis
+    spec = P(*axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+# (path regex, per-dim preferred axes).  Dims name axes in priority order;
+# the resolver drops an axis if the dim isn't divisible by it.
+# "fsdp" resolves to the data axis (ZeRO-3 style), "tp" to the model axis.
+_PARAM_RULES = [
+    # embeddings / unembedding: vocab on model
+    (r"(^|/)(embed|lm_head|unembed)(/|$)", ("tp", "fsdp")),
+    # MoE expert stacks: (n_exp, d_in, d_out): experts on data (EP), d_out on model
+    (r"experts/(gate|up)$", ("ep", None, "tp")),
+    (r"experts/down$", ("ep", "tp", None)),
+    # attention / mlp projections: (d_in, d_out) -> FSDP on d_in, TP on d_out
+    (r"(wq|wk|wv|wkv|wo|q_a|q_b|kv_a|kv_b|gate|up|down|in_proj|out_proj|w_gate|w_in|router|w_dt)$",
+     ("fsdp", "tp")),
+    # biases / norms / small vectors: replicate
+    (r".*", None),
+]
+
+
+def _resolve_axis(role, ctx: _Ctx):
+    if role == "tp":
+        return ctx.model_axis
+    if role in ("fsdp", "ep"):
+        return ctx.data_axis
+    return role
+
+
+def param_spec(path: str, shape: Sequence[int], ctx: _Ctx, *, scan_stacked: bool = False) -> P:
+    """PartitionSpec for one parameter.  ``scan_stacked`` marks a leading
+    layer-stack dim (from lax.scan layer stacking) that is never sharded."""
+    dims_offset = 1 if scan_stacked else 0
+    for pat, roles in _PARAM_RULES:
+        if re.search(pat, path):
+            if roles is None:
+                return P()
+            axes: list = [None] * len(shape)
+            for i, role in enumerate(roles):
+                d = i + dims_offset
+                if role is None or d >= len(shape):
+                    continue
+                ax = _resolve_axis(role, ctx)
+                if ax is None:
+                    continue
+                if shape[d] % ctx.axis_size(ax) == 0:
+                    axes[d] = ax
+            return P(*axes)
+    return P()
+
+
+def _tree_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _tree_paths(v, f"{prefix}/{k}" if prefix else str(k))
+    else:
+        yield prefix, tree
+
+
+def param_sharding_tree(params, mesh: Mesh, scan_stacked_prefixes: Sequence[str] = ("layers",)):
+    """Map a param pytree (nested dicts of arrays/ShapeDtypeStructs) to
+    NamedShardings."""
+    ctx = _Ctx(mesh)
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else str(k)) for k, v in tree.items()}
+        stacked = any(prefix.split("/")[0].startswith(p) for p in scan_stacked_prefixes)
+        if not jax.tree_util.all_leaves([tree]):
+            # composite pytree node (e.g. PackedRazerWeight): shard each child
+            # by its own shape under the same path rules
+            return jax.tree_util.tree_map(
+                lambda child: NamedSharding(
+                    mesh, param_spec(prefix, child.shape, ctx, scan_stacked=stacked)
+                ),
+                tree,
+            )
+        spec = param_spec(prefix, tree.shape, ctx, scan_stacked=stacked)
+        return NamedSharding(mesh, spec)
+
+    return walk(params)
+
+
+def input_sharding(mesh: Mesh, shape, batch_dim: int = 0) -> NamedSharding:
+    """Batch-sharded input spec over ("pod","data"); falls back to fewer axes
+    (then replication) when the batch dim isn't divisible (e.g. batch=1
+    long-context cells).  ``shape`` may be an int ndim (legacy) or a tuple."""
+    ctx = _Ctx(mesh)
+    if isinstance(shape, int):
+        ndim, dims = shape, None
+    else:
+        ndim, dims = len(shape), tuple(shape)
+    axes: list = [None] * ndim
+    if ctx.batch_axes:
+        cands = [ctx.batch_axes, ctx.batch_axes[-1:], ()]
+        for cand in cands:
+            if not cand:
+                break
+            size = ctx.axis_size(cand)
+            if dims is None or dims[batch_dim] % size == 0:
+                axes[batch_dim] = cand if len(cand) > 1 else cand[0]
+                break
+    return NamedSharding(mesh, P(*axes))

@@ -1,0 +1,149 @@
+"""Batched serving engine: prefill + greedy decode with continuous-batching
+lite (per-sequence lengths), optional RaZeR-packed weights (the paper's
+weight-only deployment path) and RaZeR-quantized KV cache (App. C.1).
+
+The engine is the deployment-side counterpart of the training driver: it takes
+a param tree, optionally packs every linear weight into the 4.5-bit wire
+format (offline, once), and serves batches of token prompts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import PackedRazerWeight, pack_weight
+from repro.core.qlinear import QuantConfig
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import sharding_ctx
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    max_new_tokens: int = 32
+    kv_quant: bool = False  # RaZeR KV cache (App. C.1)
+    quant: QuantConfig = QuantConfig(mode="bf16")
+    eos_id: int = -1  # -1: never stop early
+
+
+# weights large enough to be worth packing (skip norms, biases, tiny projections)
+_MIN_PACK = 16 * 16
+
+
+def pack_model_weights(params, cfg: ArchConfig, quant: QuantConfig):
+    """Offline PTQ: replace every eligible 2-D linear weight with its RaZeR
+    wire format.  Embedding/lm_head/router stay high precision (paper
+    convention); scan-stacked weights (leading layer dim) are packed per layer.
+    """
+    skip_names = ("embed", "lm_head", "router", "norm", "ln", "a_param", "conv", "A_log", "D", "dt_bias")
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        name = path.rsplit("/", 1)[-1]
+        if any(s in path for s in skip_names) or name.startswith("b") or name.endswith("_b"):
+            return tree
+        if tree.ndim == 2 and tree.shape[0] % 16 == 0 and tree.size >= _MIN_PACK:
+            return pack_weight(tree.astype(jnp.float32), sv_magnitudes=quant.sv_magnitudes,
+                               block_size=quant.block_size)
+        if tree.ndim == 3 and tree.shape[1] % 16 == 0 and tree.size >= _MIN_PACK:
+            # scan-stacked (L, d_in, d_out): pack per layer, stack the pieces
+            packed = [pack_weight(tree[i].astype(jnp.float32), sv_magnitudes=quant.sv_magnitudes,
+                                  block_size=quant.block_size) for i in range(tree.shape[0])]
+            return PackedRazerWeight(
+                codes=jnp.stack([p.codes for p in packed]),
+                scale_meta=jnp.stack([p.scale_meta for p in packed]),
+                tensor_scale=jnp.stack([p.tensor_scale for p in packed]),
+                sv_magnitudes=packed[0].sv_magnitudes,
+                shape=packed[0].shape,
+            )
+        return tree
+
+    return walk(params)
+
+
+class Engine:
+    def __init__(self, params, cfg: ArchConfig, serve_cfg: ServeConfig, mesh=None):
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.mesh = mesh
+        self.quant = serve_cfg.quant
+        if serve_cfg.quant.mode == "packed":
+            params = pack_model_weights(params, cfg, serve_cfg.quant)
+        self.params = params
+        self._decode_jit = jax.jit(self._decode_step)
+
+    # -- internals ----------------------------------------------------------
+    def _decode_step(self, params, token, caches, cur_len, enc):
+        with sharding_ctx(self.mesh):
+            return tf.decode_step(params, token, caches, cur_len, self.cfg, self.quant, enc=enc)
+
+    def _prefill(self, tokens, lengths, extras):
+        with sharding_ctx(self.mesh):
+            # single pass: caches + per-sequence last logits (ragged batches)
+            last, caches, enc = tf.prefill(
+                self.params, tokens, self.cfg, self.quant, max_len=self.scfg.max_len,
+                frontend_embeds=extras.get("frontend_embeds"),
+                enc_frames=extras.get("enc_frames"),
+                last_positions=lengths,
+            )
+            if self.scfg.kv_quant:
+                caches = self._quantize_caches(caches)
+            return last, caches, enc
+
+    def _quantize_caches(self, caches):
+        """Convert bf16 GQA caches to the packed layout (App. C.1)."""
+        from repro.serving.kvcache import kv_quantize
+
+        out = []
+        for c in caches:
+            if isinstance(c, dict) and "k" in c and c["k"].ndim == 5:
+                kc, km = kv_quantize(c["k"])
+                vc, vm = kv_quantize(c["v"])
+                out.append({"k_codes": kc, "k_meta": km, "v_codes": vc, "v_meta": vm})
+            else:
+                out.append(c)
+        return out
+
+    # -- public API ---------------------------------------------------------
+    def generate(self, prompts: Sequence[Sequence[int]], extras: Optional[Dict] = None,
+                 max_new_tokens: Optional[int] = None) -> List[List[int]]:
+        """Greedy-decode a batch of token prompts (continuous-batching lite:
+        ragged prompt lengths are right-padded and tracked per sequence)."""
+        extras = extras or {}
+        n_new = max_new_tokens or self.scfg.max_new_tokens
+        b = len(prompts)
+        lens = np.array([len(p) for p in prompts], np.int32)
+        if self.cfg.ssm or self.cfg.block_pattern:
+            assert len(set(lens.tolist())) == 1, "recurrent archs need equal prompt lengths"
+        s = int(lens.max())
+        toks = np.zeros((b, s), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, : len(p)] = p
+        tokens = jnp.asarray(toks)
+        lengths = jnp.asarray(lens)
+
+        last, caches, enc = self._prefill(tokens, lengths, extras)
+        out = [list(p) for p in prompts]
+        cur = lengths
+        done = np.zeros(b, bool)
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        for step in range(n_new):
+            for i in range(b):
+                if not done[i]:
+                    t = int(tok[i])
+                    out[i].append(t)
+                    if t == self.scfg.eos_id:
+                        done[i] = True
+            if done.all() or step == n_new - 1:
+                break
+            logits, caches = self._decode_jit(self.params, tok, caches, cur, enc)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            cur = cur + 1
+        return out

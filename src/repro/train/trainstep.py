@@ -1,0 +1,125 @@
+"""pjit train/serve step factories: sharded params, optimizer, grad-accum.
+
+These produce the exact jitted callables the dry-run lowers and the drivers
+execute.  All sharding comes from parallel.sharding's resolver; the model code
+itself is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.qlinear import QuantConfig
+from repro.models import transformer as tf
+from repro.models.config import ArchConfig
+from repro.parallel.sharding import (
+    input_sharding,
+    param_sharding_tree,
+    sharding_ctx,
+)
+from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+DEFAULT_QUANT = QuantConfig(mode="bf16")
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig,
+                    quant: QuantConfig = DEFAULT_QUANT, microbatch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatch`` > 0 enables gradient accumulation via lax.scan over
+    microbatches (sequential; overlaps of grads+compute are XLA's job)."""
+
+    def loss_fn(params, batch):
+        return tf.lm_loss(params, batch, cfg, quant)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt_state: OptState, batch):
+        with sharding_ctx(mesh):
+            if microbatch and microbatch > 1:
+                def mb(carry, sub):
+                    acc, = carry
+                    loss, metrics, g = grads_of(params, sub)
+                    acc = jax.tree_util.tree_map(lambda a, b: a + b, acc, g)
+                    return (acc,), (loss, metrics)
+
+                sub0 = jax.tree_util.tree_map(
+                    lambda x: x.reshape(microbatch, x.shape[0] // microbatch, *x.shape[1:]),
+                    batch,
+                )
+                zero = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+                (gsum,), (losses, ms) = jax.lax.scan(mb, (zero,), sub0)
+                grads = jax.tree_util.tree_map(lambda g: g / microbatch, gsum)
+                loss = jnp.mean(losses)
+                metrics = jax.tree_util.tree_map(jnp.mean, ms)
+            else:
+                loss, metrics, grads = grads_of(params, batch)
+            new_params, new_opt, opt_metrics = adamw_update(params, grads, opt_state, opt_cfg)
+            metrics = dict(metrics, loss=loss, **opt_metrics)
+            return new_params, new_opt, metrics
+
+    if mesh is None:
+        return jax.jit(step)
+    return step  # sharded jit assembled by bind_train_step (needs param shapes)
+
+
+def bind_train_step(cfg: ArchConfig, mesh: Mesh, params_shape, opt_cfg: AdamWConfig,
+                    quant: QuantConfig = DEFAULT_QUANT, microbatch: int = 0,
+                    donate: bool = True):
+    """Fully-sharded jitted train step, given the param ShapeDtype tree."""
+    step = make_train_step(cfg, mesh, opt_cfg, quant, microbatch)
+    p_shard = param_sharding_tree(params_shape, mesh)
+    opt_shape = jax.eval_shape(init_opt_state, params_shape)
+    o_shard = OptState(
+        step=NamedSharding(mesh, P()),
+        m=param_sharding_tree(opt_shape.m, mesh),
+        v=param_sharding_tree(opt_shape.v, mesh),
+    )
+
+    def batch_shard(tree):
+        return jax.tree_util.tree_map(
+            lambda s: input_sharding(mesh, s.shape, batch_dim=1 if len(s.shape) == 3 and s.shape[0] == 3 else 0),
+            tree,
+        )
+
+    return functools.partial(
+        jax.jit,
+        in_shardings=None,
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )(step), p_shard, o_shard
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh], max_len: int,
+                      quant: QuantConfig = DEFAULT_QUANT):
+    def prefill(params, batch):
+        with sharding_ctx(mesh):
+            return tf.prefill(
+                params, batch["tokens"], cfg, quant, max_len=max_len,
+                positions3=batch.get("positions3"),
+                frontend_embeds=batch.get("frontend_embeds"),
+                enc_frames=batch.get("enc_frames"),
+            )
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh],
+                     quant: QuantConfig = DEFAULT_QUANT):
+    def decode(params, token, caches, cur_len, enc=None):
+        with sharding_ctx(mesh):
+            return tf.decode_step(params, token, caches, cur_len, cfg, quant, enc=enc)
+
+    return decode

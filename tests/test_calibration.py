@@ -1,0 +1,72 @@
+"""Calibration (Fig. 3 / App. B.2) + AWQ/GPTQ composition tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.awq import apply_awq, awq_search
+from repro.core.calibration import (
+    DEFAULT_SV_MAGNITUDES,
+    calibrate_activation_sv,
+    select_weight_sv_pairs,
+    sv_pair_sweep,
+)
+from repro.core.gptq import gptq_quantize, make_group_quantizer
+from repro.core.razer import razer_qdq, razer_quantize
+
+
+def _weights(shape=(512, 256), seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_t(5, size=shape) * 0.02).astype(np.float32))
+
+
+def test_fig3_parabola_min_at_5():
+    sweep = sv_pair_sweep(_weights(), magnitudes=(2.5, 3.5, 4.5, 5.0, 5.5, 6.5, 7.5, 8.5, 9.5))
+    best = min(sweep, key=sweep.get)
+    assert best == 5.0  # the paper's Fig. 3 result
+    assert all(v <= 1.0 + 1e-9 for v in sweep.values())  # never worse than NVFP4
+    # parabola-ish: endpoints worse than the minimum
+    assert sweep[2.5] > sweep[5.0] and sweep[9.5] > sweep[5.0]
+
+
+def test_default_magnitudes_respect_decoder_range():
+    # §4.4 decoder: magnitude in [2.5, 9.5], multiples of 0.5, no grid collision
+    for m in DEFAULT_SV_MAGNITUDES:
+        assert 2.5 <= m <= 9.5 and (m * 2) == int(m * 2)
+        assert m not in (3.0, 4.0, 6.0)
+
+
+def test_select_weight_pairs_includes_5():
+    m0, m1 = select_weight_sv_pairs(_weights(seed=3), magnitudes=(4.5, 5.0, 7.0, 8.0))
+    assert m0 == 5.0 and m1 != m0
+
+
+def test_activation_calibration_runs():
+    rng = np.random.default_rng(1)
+    acts = [rng.standard_normal((64, 64)).astype(np.float32) for _ in range(3)]
+    best = calibrate_activation_sv(acts, magnitudes=(4.5, 5.0, 5.5))
+    assert best in (4.5, 5.0, 5.5)
+
+
+def test_awq_never_hurts():
+    w = _weights((256, 128), seed=5)
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((256, 256)).astype(np.float32)
+    x[:, ::37] *= 25  # salient channels
+    fn = lambda v: razer_qdq(v, axis=0)
+    res = awq_search(w, x, fn)
+    ref = jnp.asarray(x) @ w
+    plain = float(jnp.mean((jnp.asarray(x) @ fn(w) - ref) ** 2))
+    combo = float(jnp.mean((jnp.asarray(x) @ apply_awq(w, res, fn) - ref) ** 2))
+    assert combo <= plain + 1e-12  # alpha=0 is in the grid, so never worse
+
+
+def test_gptq_beats_round_to_nearest():
+    w = _weights((128, 64), seed=7)
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal((512, 128)).astype(np.float32)
+    ref = jnp.asarray(x) @ w
+    rtn = float(jnp.mean((jnp.asarray(x) @ razer_qdq(w, axis=0) - ref) ** 2))
+    factory = make_group_quantizer(lambda g: razer_quantize(g, axis=0, scale_fmt="e3m3"))
+    q = gptq_quantize(np.asarray(w), x, factory, group_size=16, block_size=32)
+    gp = float(jnp.mean((jnp.asarray(x) @ jnp.asarray(q) - ref) ** 2))
+    assert gp < rtn  # error compensation must help on correlated inputs

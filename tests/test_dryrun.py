@@ -1,0 +1,54 @@
+"""Integration: the multi-pod dry-run machinery end-to-end (subprocess, since
+XLA_FLAGS must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=timeout,
+    )
+
+
+def test_dryrun_single_cell_both_meshes(tmp_path):
+    """whisper decode_32k: smallest full-config cell; proves 512 fake devices,
+    both production meshes, memory/cost/collective extraction."""
+    out = str(tmp_path / "dr.json")
+    r = _run_dryrun(["--arch", "whisper_base", "--shape", "decode_32k",
+                     "--mesh", "both", "--no-cost", "--out", out])
+    assert r.returncode == 0, r.stderr[-2000:]
+    recs = json.load(open(out))
+    assert {x["mesh"] for x in recs} == {"16x16", "2x16x16"}
+    for rec in recs:
+        assert "error" not in rec
+        assert rec["chips"] == (256 if rec["mesh"] == "16x16" else 512)
+        assert rec["memory"]["argument_bytes"] > 0
+        assert rec["cost_raw"]["flops"] > 0
+        assert rec["collectives_raw"].get("total", 0) > 0
+
+
+def test_dryrun_results_complete():
+    """The committed sweep must cover every applicable cell with zero errors."""
+    path = os.path.join(REPO, "results", "dryrun.json")
+    if not os.path.exists(path):
+        pytest.skip("full sweep not present")
+    recs = json.load(open(path))
+    from repro.configs import ARCH_IDS, cells
+
+    want = {(a, s, m) for a in ARCH_IDS for s in cells(a) for m in ("16x16", "2x16x16")}
+    got = {(r["arch"], r["shape"], r["mesh"]) for r in recs if "error" not in r}
+    assert want <= got, want - got
+    assert len(want) == 64  # 32 cells x 2 meshes
+    # roofline terms present for every single-pod cell
+    for r in recs:
+        if r["mesh"] == "16x16":
+            assert "roofline" in r and r["dominant"] in ("compute_s", "memory_s", "collective_s")

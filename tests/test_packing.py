@@ -1,0 +1,157 @@
+"""Tests for the 4.5-bit wire format + §4.4 decoder semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import QuantConfig, QuantizedLinear, qlinear, razer_quantize
+from repro.core.packing import (
+    PackedRazerWeight,
+    decode_offset_register,
+    encode_offset_register,
+    pack_fp4_codes,
+    pack_scale_meta,
+    pack_weight,
+    unpack_fp4_codes,
+    unpack_scale_meta,
+)
+
+
+def test_nibble_pack_roundtrip():
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 16, (5, 32)).astype(np.uint8)
+    packed = pack_fp4_codes(jnp.asarray(codes))
+    assert packed.shape == (5, 16) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(unpack_fp4_codes(packed)), codes)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=1, max_value=8), st.integers(min_value=1, max_value=16))
+def test_nibble_pack_roundtrip_property(r, c2):
+    rng = np.random.default_rng(r * 100 + c2)
+    codes = rng.integers(0, 16, (r, 2 * c2)).astype(np.uint8)
+    out = np.asarray(unpack_fp4_codes(pack_fp4_codes(jnp.asarray(codes))))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_offset_register_paper_example():
+    """§4.4: SV -5.0 -> offset register stores 1010b (= -1.0), 6.0-1.0=5.0."""
+    assert encode_offset_register(5.0) == 0b1010
+    assert decode_offset_register(0b1010) == 5.0
+
+
+@pytest.mark.parametrize("mag", [2.5, 3.5, 4.5, 5.0, 5.5, 6.5, 7.0, 7.5, 8.0, 9.0, 9.5])
+def test_offset_register_roundtrip(mag):
+    assert decode_offset_register(encode_offset_register(mag)) == mag
+
+
+def test_offset_register_range():
+    with pytest.raises(ValueError):
+        encode_offset_register(10.0)  # offset 4.0 > 3.5
+    with pytest.raises(ValueError):
+        encode_offset_register(5.25)  # not a multiple of 0.5
+
+
+def test_scale_meta_byte_weight():
+    from repro.core.formats import positive_format_values
+
+    grid = positive_format_values("e3m3")
+    scales = jnp.asarray(grid[[3, 10, 63]])
+    idx = jnp.asarray([-1, 1, 3])
+    byte = pack_scale_meta(scales, idx, weight=True)
+    s, sv = unpack_scale_meta(byte, weight=True, sv_magnitudes=(5.0, 8.0))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(scales))
+    np.testing.assert_array_equal(np.asarray(sv), [5.0, -5.0, -8.0])  # idx -1 -> don't care (+5)
+
+
+def test_scale_meta_byte_activation():
+    from repro.core.formats import positive_format_values
+
+    grid = positive_format_values("e4m3")
+    scales = jnp.asarray(grid[[0, 50, 126]])
+    idx = jnp.asarray([0, 1, 0])
+    byte = pack_scale_meta(scales, idx, weight=False, scale_fmt="e4m3")
+    s, sv = unpack_scale_meta(byte, weight=False, sv_magnitudes=(5.0,))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(scales))
+    np.testing.assert_array_equal(np.asarray(sv), [5.0, -5.0, 5.0])
+
+
+def test_pack_weight_matches_razer_dequant():
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((128, 48)).astype(np.float32)
+    pw = pack_weight(jnp.asarray(w))
+    ref = razer_quantize(jnp.asarray(w), axis=0, scale_fmt="e3m3").dequantize()
+    np.testing.assert_allclose(np.asarray(pw.dequantize()), np.asarray(ref), atol=1e-6)
+
+
+def test_pack_weight_footprint_is_4p5_bits():
+    w = jnp.zeros((256, 64))
+    pw = pack_weight(w)
+    bits = (pw.codes.size + pw.scale_meta.size) * 8 + 32
+    assert bits / w.size == pytest.approx(4.5, abs=0.01)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=5000))
+def test_pack_weight_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    k = int(rng.choice([32, 64, 128]))
+    n = int(rng.choice([8, 24]))
+    w = (rng.standard_normal((k, n)) * rng.uniform(0.1, 10)).astype(np.float32)
+    pw = pack_weight(jnp.asarray(w))
+    ref = razer_quantize(jnp.asarray(w), axis=0, scale_fmt="e3m3").dequantize()
+    np.testing.assert_allclose(np.asarray(pw.dequantize()), np.asarray(ref), atol=1e-5, rtol=1e-5)
+
+
+def test_packed_weight_is_pytree():
+    import jax
+
+    pw = pack_weight(jnp.ones((32, 16)))
+    leaves = jax.tree_util.tree_leaves(pw)
+    assert len(leaves) == 3
+    pw2 = jax.tree_util.tree_map(lambda x: x, pw)
+    assert isinstance(pw2, PackedRazerWeight) and pw2.shape == (32, 16)
+
+
+def test_qlinear_modes_agree():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    y_fake = qlinear(x, QuantizedLinear.create(w, QuantConfig(mode="fakequant")), QuantConfig(mode="fakequant"))
+    lin_packed = QuantizedLinear.create(w, QuantConfig(mode="packed"))
+    y_packed = qlinear(x, lin_packed, QuantConfig(mode="packed"))
+    np.testing.assert_allclose(np.asarray(y_fake), np.asarray(y_packed), atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# §4.3 GPU-kernel FP16-scale encoding (sign + MSB-exponent metadata)
+# ---------------------------------------------------------------------------
+def test_fp16_scale_meta_roundtrip():
+    from repro.core.packing import (
+        fold_scales_below_two,
+        pack_scale_meta_fp16,
+        unpack_scale_meta_fp16,
+    )
+
+    rng = np.random.default_rng(0)
+    scales = jnp.asarray(rng.uniform(1e-4, 30.0, (8, 16)).astype(np.float32))
+    ts = jnp.asarray(1.0, jnp.float32)
+    folded, ts2 = fold_scales_below_two(scales, ts)
+    assert float(jnp.max(folded)) < 2.0
+    np.testing.assert_allclose(np.asarray(folded) * float(ts2), np.asarray(scales), rtol=1e-6)
+
+    idx = jnp.asarray(rng.integers(-1, 4, (8, 16)), jnp.int32)
+    word = pack_scale_meta_fp16(folded, idx)
+    assert word.dtype == jnp.uint16  # 16 bits/block of 128 = 0.125 bits/weight
+    s, sv = unpack_scale_meta_fp16(word)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(folded.astype(jnp.float16), np.float32), rtol=1e-3)
+    table = {0: 5.0, 1: -5.0, 2: 8.0, 3: -8.0}
+    want = np.vectorize(lambda i: table[max(int(i), 0)])(np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(sv), want)
+
+
+def test_fp16_variant_footprint():
+    # paper §4.3: 4-bit codes + fp16 scale per 128-block = 4.125 bits/weight
+    bits_per_weight = 4 + 16 / 128
+    assert bits_per_weight == pytest.approx(4.125)

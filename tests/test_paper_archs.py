@@ -1,0 +1,27 @@
+"""Smoke tests for the paper's own eval architectures (Table 3 set)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import PAPER_ARCH_IDS, get_config
+from repro.models import transformer as tf
+from repro.models.inputs import materialize, train_input_specs
+
+
+@pytest.mark.parametrize("arch_id", PAPER_ARCH_IDS)
+def test_paper_arch_forward_and_grad(arch_id):
+    cfg = get_config(arch_id).reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = materialize(train_input_specs(cfg, 16, 2), seed=1, vocab=cfg.vocab_size)
+    loss, m = tf.lm_loss(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: tf.lm_loss(p, batch, cfg)[0])(params)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree_util.tree_leaves(g))
+
+
+@pytest.mark.parametrize("arch_id", PAPER_ARCH_IDS)
+def test_paper_arch_full_config_numbers(arch_id):
+    cfg = get_config(arch_id)
+    # sanity: every linear dim divides the 16-way model axis and the 16-block
+    assert cfg.d_model % 16 == 0 and cfg.d_ff % 16 == 0 and cfg.vocab_size % 16 == 0
+    assert cfg.hd % 16 == 0  # quantized KV needs head_dim % 16

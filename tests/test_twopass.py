@@ -1,0 +1,57 @@
+"""App. D.3 two-pass W4A4 realization tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.razer import razer_quantize, sv_pairs_to_set
+from repro.core.twopass import split_special_value, two_pass_matmul, two_pass_weights
+
+
+def test_paper_example_splits():
+    # §D.3: +0 -> +-4 in B_main; +-1 selects +-5, +-4 selects +-8
+    assert split_special_value(5.0) == (4.0, 1.0)
+    assert split_special_value(-5.0) == (-4.0, -1.0)
+    assert split_special_value(8.0) == (4.0, 4.0)
+    assert split_special_value(-8.0) == (-4.0, -4.0)
+
+
+@pytest.mark.parametrize("v", [2.5, 3.5, 4.5, 5.5, 6.5, 7.0, 7.5, 9.0, 10.0, 12.0])
+def test_d3_reachable_set(v):
+    x1, x2 = split_special_value(v)
+    assert x1 + x2 == pytest.approx(v)
+    from repro.core.formats import FP4_POS_VALUES
+
+    pos = set(float(a) for a in FP4_POS_VALUES) | set(-float(a) for a in FP4_POS_VALUES)
+    assert x1 in pos and x2 in pos
+
+
+def test_two_pass_equals_single_pass_exactly():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((128, 64)).astype(np.float32))
+    bq = razer_quantize(w, axis=0)
+    w_main, w_comp = two_pass_weights(bq)
+    np.testing.assert_allclose(
+        np.asarray(w_main + w_comp), np.asarray(bq.dequantize()), rtol=1e-6, atol=1e-7
+    )
+    x = jnp.asarray(rng.standard_normal((8, 128)).astype(np.float32))
+    y2, density = two_pass_matmul(x, w)
+    y1 = x @ bq.dequantize()
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), rtol=1e-5, atol=1e-5)
+    assert 0 <= float(density) < 0.2  # B_comp is sparse (Fig. 7 premise)
+
+
+def test_two_pass_halves_are_fp4_legal():
+    """Every entry of both halves must sit on the FP4 grid after unscaling."""
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((64, 32)).astype(np.float32))
+    bq = razer_quantize(w, axis=0, special_values=sv_pairs_to_set(5.0, 7.0))
+    w_main, w_comp = two_pass_weights(bq)
+    from repro.core.formats import FP4_VALUES
+    from repro.core.nvfp4 import block_reshape
+
+    grid = set(np.unique(FP4_VALUES).tolist())
+    scale = np.asarray(bq.block_scale * bq.tensor_scale)[..., None]
+    for half in (w_main, w_comp):
+        q = np.asarray(block_reshape(half, 16, axis=0)) / scale
+        vals = set(np.round(np.unique(q), 6).tolist())
+        assert vals <= {round(float(g), 6) for g in grid}, vals - grid
