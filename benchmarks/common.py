@@ -99,10 +99,10 @@ def trained_tiny_lm(steps: int = 60, force: bool = False):
 
 
 def eval_loss(params, cfg, batches, quant=None) -> float:
-    from repro.core.qlinear import QuantConfig
+    from repro.core.policy import QuantPolicy
     from repro.models import transformer as tf
 
-    quant = quant or QuantConfig(mode="bf16")
+    quant = quant or QuantPolicy.bf16()
     tot = 0.0
     for b in batches:
         loss, m = tf.lm_loss(

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import QuantPolicy
 from repro.serving.engine import Engine, ServeConfig
 
 from .common import trained_tiny_lm
@@ -27,7 +27,7 @@ def appC1_kv_quant() -> List:
     for name, scfg in {
         "kv_razer": ServeConfig(max_len=64, max_new_tokens=16, kv_quant=True),
         "w_packed+kv_razer": ServeConfig(max_len=64, max_new_tokens=16, kv_quant=True,
-                                         quant=QuantConfig(mode="packed")),
+                                         quant=QuantPolicy.packed()),
     }.items():
         eng = Engine(params, cfg, scfg)
         out = eng.generate(prompts)

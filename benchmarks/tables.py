@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    QuantConfig,
+    QuantPolicy,
     fouroversix_quantize,
     int4_quantize,
     mxfp4_quantize,
@@ -126,16 +126,16 @@ def table3_trained_lm_ppl() -> List:
     base = eval_loss(params, cfg, batches)
     rows = [("table3ppl/fp_base", 0.0, f"eval_loss={base:.4f}")]
     cfgs = {
-        "w16_mxfp4": QuantConfig(mode="fakequant", weight_format="mxfp4"),
-        "w16_nvfp4": QuantConfig(mode="fakequant", weight_format="nvfp4", weight_scale_fmt="e4m3"),
-        "w16_nf4": QuantConfig(mode="fakequant", weight_format="nf4"),
-        "w16_4over6": QuantConfig(mode="fakequant", weight_format="fouroversix"),
-        "w16_razer": QuantConfig(mode="fakequant", weight_format="razer"),
-        "w4a4_nvfp4": QuantConfig(mode="fakequant", weight_format="nvfp4", act_format="nvfp4",
+        "w16_mxfp4": QuantPolicy.fakequant("mxfp4"),
+        "w16_nvfp4": QuantPolicy.fakequant("nvfp4", weight_scale_fmt="e4m3"),
+        "w16_nf4": QuantPolicy.fakequant("nf4"),
+        "w16_4over6": QuantPolicy.fakequant("fouroversix"),
+        "w16_razer": QuantPolicy.fakequant("razer"),
+        "w4a4_nvfp4": QuantPolicy.fakequant("nvfp4", act_format="nvfp4",
                                   weight_scale_fmt="e4m3"),
-        "w4a4_4over6": QuantConfig(mode="fakequant", weight_format="fouroversix",
+        "w4a4_4over6": QuantPolicy.fakequant("fouroversix",
                                    act_format="fouroversix"),
-        "w4a4_razer": QuantConfig(mode="fakequant", weight_format="razer", act_format="razer"),
+        "w4a4_razer": QuantPolicy.fakequant("razer", act_format="razer"),
     }
     for name, qc in cfgs.items():
         t0 = time.perf_counter()
@@ -152,10 +152,10 @@ def table3_trained_lm_ppl() -> List:
 # whether quantization flips the model's argmax decisions, not just its loss.
 # ---------------------------------------------------------------------------
 def _top1_accuracy(params, cfg, batches, quant=None) -> float:
-    from repro.core.qlinear import QuantConfig
+    from repro.core.policy import QuantPolicy
     from repro.models import transformer as tf
 
-    quant = quant or QuantConfig(mode="bf16")
+    quant = quant or QuantPolicy.bf16()
     correct = total = 0
     for b in batches:
         logits, _ = tf.forward_train(params, jnp.asarray(b["tokens"]), cfg, quant)
@@ -171,12 +171,12 @@ def table4_task_accuracy() -> List:
     base = _top1_accuracy(params, cfg, batches)
     rows.append(("table4/fp16", 0.0, f"top1_acc={base:.4f}"))
     for name, qc in {
-        "w4a4_mxfp4": QuantConfig(mode="fakequant", weight_format="mxfp4", act_format="mxfp4"),
-        "w4a4_nvfp4": QuantConfig(mode="fakequant", weight_format="nvfp4", act_format="nvfp4",
+        "w4a4_mxfp4": QuantPolicy.fakequant("mxfp4", act_format="mxfp4"),
+        "w4a4_nvfp4": QuantPolicy.fakequant("nvfp4", act_format="nvfp4",
                                   weight_scale_fmt="e4m3"),
-        "w4a4_4over6": QuantConfig(mode="fakequant", weight_format="fouroversix",
+        "w4a4_4over6": QuantPolicy.fakequant("fouroversix",
                                    act_format="fouroversix"),
-        "w4a4_razer": QuantConfig(mode="fakequant", weight_format="razer", act_format="razer"),
+        "w4a4_razer": QuantPolicy.fakequant("razer", act_format="razer"),
     }.items():
         t0 = time.perf_counter()
         acc = _top1_accuracy(params, cfg, batches, qc)
@@ -192,12 +192,12 @@ def table6_wa_ablation() -> List:
     params, cfg, batches = trained_tiny_lm()
     base = eval_loss(params, cfg, batches)
     combos = {
-        "nvfp4_nvfp4": QuantConfig(mode="fakequant", weight_format="nvfp4", act_format="nvfp4",
+        "nvfp4_nvfp4": QuantPolicy.fakequant("nvfp4", act_format="nvfp4",
                                    weight_scale_fmt="e4m3"),
-        "razer_nvfp4": QuantConfig(mode="fakequant", weight_format="razer", act_format="nvfp4"),
-        "nvfp4_razer": QuantConfig(mode="fakequant", weight_format="nvfp4", act_format="razer",
+        "razer_nvfp4": QuantPolicy.fakequant("razer", act_format="nvfp4"),
+        "nvfp4_razer": QuantPolicy.fakequant("nvfp4", act_format="razer",
                                    weight_scale_fmt="e4m3"),
-        "razer_razer": QuantConfig(mode="fakequant", weight_format="razer", act_format="razer"),
+        "razer_razer": QuantPolicy.fakequant("razer", act_format="razer"),
     }
     rows = []
     for name, qc in combos.items():

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import QuantPolicy
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
 
@@ -30,9 +30,9 @@ def main():
     for name, scfg in {
         "bf16": ServeConfig(max_len=64, max_new_tokens=args.max_new),
         "packed RaZeR W4": ServeConfig(max_len=64, max_new_tokens=args.max_new,
-                                       quant=QuantConfig(mode="packed")),
+                                       quant=QuantPolicy.packed()),
         "packed W4 + RaZeR KV": ServeConfig(max_len=64, max_new_tokens=args.max_new,
-                                            quant=QuantConfig(mode="packed"), kv_quant=True),
+                                            quant=QuantPolicy.packed(kv_quant=True)),
     }.items():
         eng = Engine(params, cfg, scfg)
         t0 = time.perf_counter()

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import QuantPolicy
 from repro.models import transformer as tf
 from repro.train.checkpoint import CheckpointManager
 from repro.train.data import DataConfig, SyntheticLM
@@ -76,14 +76,14 @@ def main():
             tot += float(m["xent"])
         return tot / len(eval_batches)
 
-    base = eval_with(QuantConfig(mode="bf16"))
+    base = eval_with(QuantPolicy.bf16())
     print(f"\neval loss fp: {base:.4f}")
     for name, qc in {
-        "W4 nvfp4": QuantConfig(mode="fakequant", weight_format="nvfp4", weight_scale_fmt="e4m3"),
-        "W4 razer": QuantConfig(mode="fakequant", weight_format="razer"),
-        "W4A4 nvfp4": QuantConfig(mode="fakequant", weight_format="nvfp4", act_format="nvfp4",
+        "W4 nvfp4": QuantPolicy.fakequant("nvfp4", weight_scale_fmt="e4m3"),
+        "W4 razer": QuantPolicy.fakequant("razer"),
+        "W4A4 nvfp4": QuantPolicy.fakequant("nvfp4", act_format="nvfp4",
                                   weight_scale_fmt="e4m3"),
-        "W4A4 razer": QuantConfig(mode="fakequant", weight_format="razer", act_format="razer"),
+        "W4A4 razer": QuantPolicy.fakequant("razer", act_format="razer"),
     }.items():
         print(f"eval loss {name:12s}: {eval_with(qc):.4f} (delta {eval_with(qc) - base:+.4f})")
 

@@ -1,4 +1,5 @@
-"""repro.core -- the paper's contribution: NVFP4 + RaZeR numerics."""
+"""repro.core -- the paper's contribution: NVFP4 + RaZeR numerics, plus the
+quantization-policy API (format registry + per-tensor specs + per-layer rules)."""
 from .baselines import fouroversix_quantize, int4_quantize, mxfp4_quantize, nf4_quantize
 from .calibration import calibrate_activation_sv, select_weight_sv_pairs, sv_pair_sweep
 from .formats import (
@@ -21,7 +22,17 @@ from .packing import (
     pack_weight,
     unpack_fp4_codes,
 )
+from .policy import (
+    BF16,
+    DEFAULT_DENSE_RULES,
+    LayerRule,
+    QuantPolicy,
+    TensorSpec,
+    as_policy,
+    tree_paths,
+)
 from .qlinear import QuantConfig, QuantizedLinear, qdq_activation, qdq_weight, qlinear
+from .registry import FormatEntry, format_names, get_format, register_format, unregister_format
 from .razer import (
     ACT_SPECIAL_VALUES,
     WEIGHT_SPECIAL_VALUES,

@@ -1,0 +1,380 @@
+"""Unified quantization-policy API.
+
+Three first-class concepts replace the old flat ``QuantConfig``:
+
+  * ``TensorSpec``  -- how ONE tensor role is quantized (element format from
+    the registry, mode, block size, block-scale format, special values).
+    Frozen/hashable, so it is jit-static friendly.
+  * the format registry (``core.registry``) -- pluggable quantize / pack /
+    kernel implementations per format name.
+  * ``QuantPolicy`` -- weight/act/kv ``TensorSpec``s plus an ordered list of
+    glob/regex per-layer ``LayerRule``s mapping param-tree paths to spec
+    overrides.  First match wins; unmatched paths use the base weight spec.
+
+The paper's knobs map directly: element format (§3/§4), E3M3-vs-E4M3 block
+scales (§4.1), |V|=4 weight / |V|=2 activation SV sets (§4.2), per-model SV
+magnitudes (Table 12) -- and per-layer rules express what the flat config
+could not: keep embed/lm_head/router dense, calibrated per-layer SV
+magnitudes, role-specific precision, and so on.  NB: paths address the param
+tree as it is laid out -- in scan-stacked archs a ``layers_N`` path names a
+stacked GROUP of same-type layers, not one individual layer.
+
+``QuantConfig`` (core.qlinear) survives as a thin constructor:
+``QuantConfig(...).to_policy()`` -- every legacy call site keeps working via
+``as_policy``.
+"""
+from __future__ import annotations
+
+import fnmatch
+import re
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from . import registry
+from .razer import ACT_SPECIAL_VALUES, WEIGHT_SPECIAL_VALUES
+
+__all__ = [
+    "TensorSpec",
+    "LayerRule",
+    "QuantPolicy",
+    "as_policy",
+    "DEFAULT_DENSE_RULES",
+    "BF16",
+    "tree_paths",
+]
+
+_MODES = ("bf16", "fakequant", "packed")
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """How one tensor role (a weight, the activations, the KV cache) is
+    quantized.  ``format=None`` or ``mode='bf16'`` means dense."""
+
+    format: Optional[str] = "razer"
+    mode: str = "fakequant"  # bf16 | fakequant | packed
+    block_size: int = 16
+    scale_fmt: Optional[str] = "e3m3"
+    special_values: Optional[Tuple[float, ...]] = WEIGHT_SPECIAL_VALUES
+    ste: bool = False  # straight-through estimator (QAT, beyond-paper)
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode {self.mode!r} not in {_MODES}")
+        if self.special_values is not None:
+            object.__setattr__(self, "special_values", tuple(float(v) for v in self.special_values))
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def weight(cls, format: str = "razer", mode: str = "fakequant", **kw) -> "TensorSpec":
+        """Weight-role spec: E3M3 scales, |V|=4 SV set (§4.1/§4.2 defaults)."""
+        kw.setdefault("scale_fmt", "e3m3")
+        kw.setdefault("special_values", WEIGHT_SPECIAL_VALUES)
+        return cls(format=format, mode=mode, **kw)
+
+    @classmethod
+    def act(cls, format: str = "razer", **kw) -> "TensorSpec":
+        """Activation-role spec: E4M3 scales, |V|=2 SV set (always dynamic)."""
+        kw.setdefault("scale_fmt", "e4m3")
+        kw.setdefault("special_values", ACT_SPECIAL_VALUES)
+        return cls(format=format, mode="fakequant", **kw)
+
+    @classmethod
+    def kv(cls, format: str = "razer", **kw) -> "TensorSpec":
+        """KV-cache spec (App. C.1): activation-style wire format."""
+        kw.setdefault("scale_fmt", "e4m3")
+        kw.setdefault("special_values", ACT_SPECIAL_VALUES)
+        return cls(format=format, mode="packed", **kw)
+
+    @classmethod
+    def dense(cls) -> "TensorSpec":
+        return cls(format=None, mode="bf16", scale_fmt=None, special_values=None)
+
+    def with_(self, **fields) -> "TensorSpec":
+        return replace(self, **fields)
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def quantizes(self) -> bool:
+        return self.format is not None and self.mode in ("fakequant", "packed")
+
+    @property
+    def entry(self) -> registry.FormatEntry:
+        if self.format is None:
+            raise ValueError("dense TensorSpec has no format entry")
+        return registry.get_format(self.format)
+
+    @property
+    def effective_block_size(self) -> int:
+        """The block size the quantize fn will actually use: the spec's,
+        floored at the format's minimum (e.g. OCP MXFP4 blocks are >= 32)."""
+        return max(self.block_size, self.entry.min_block_size)
+
+    @property
+    def sv_magnitudes(self) -> Tuple[float, float]:
+        """The (m0, m1) pair-magnitudes the packed wire format encodes.
+
+        A single-pair set (activation-style ``(5.0, -5.0)``) duplicates its
+        magnitude into both offset registers; more than 2 pairs cannot be
+        encoded in the 2 metadata bits (§4.1) and is a hard error."""
+        mags = sorted({abs(float(v)) for v in (self.special_values or ())})
+        if not mags:
+            raise ValueError("TensorSpec has no special values to derive sv_magnitudes from")
+        if len(mags) == 1:
+            return (mags[0], mags[0])
+        if len(mags) == 2:
+            return (mags[0], mags[1])
+        raise ValueError(
+            f"the packed wire format encodes at most 2 SV pairs (2 metadata bits, "
+            f"§4.1); got {len(mags)} distinct magnitudes {tuple(mags)}"
+        )
+
+    # -- numerics (registry-dispatched) --------------------------------------
+    def quantize(self, x, axis: int = -1, **kw):
+        """Quantize ``x`` along ``axis`` -> BlockQuantized-like."""
+        entry = self.entry
+        merged = registry.spec_kwargs(entry, self)
+        merged.update(kw)
+        return entry.quantize(x, axis=axis, **merged)
+
+    def qdq(self, x, axis: int = -1):
+        """Quantize-dequantize (fake-quant) preserving dtype."""
+        orig = x.dtype
+        out = self.quantize(x.astype(jnp.float32), axis=axis).dequantize()
+        return out.astype(orig)
+
+    def pack(self, w):
+        """Bit-pack a weight into the format's wire container."""
+        entry = self.entry
+        if entry.pack_fn is None:
+            raise ValueError(
+                f"format {self.format!r} has no pack_fn registered; "
+                f"packed mode is unavailable (register one via register_format)"
+            )
+        return entry.pack_fn(w, self)
+
+
+@dataclass(frozen=True)
+class LayerRule:
+    """One ordered per-layer rule: ``pattern`` -> spec replacement/override.
+
+    ``pattern`` is a glob (fnmatch, matched against the '/'-joined param-tree
+    path) or, with a ``re:`` prefix, a regex applied with ``re.search``.
+
+    Exactly one of three behaviors:
+      * ``spec=None, overrides=()``      -> matched tensors stay dense
+      * ``spec=TensorSpec(...)``         -> full spec replacement
+      * ``overrides=(('field', v), ...)``-> ``replace(base_spec, **fields)``
+        (partial override, e.g. calibrated per-layer SV magnitudes)
+    """
+
+    pattern: str
+    spec: Optional[TensorSpec] = None
+    overrides: Tuple[Tuple[str, Any], ...] = ()
+
+    @staticmethod
+    def dense(pattern: str) -> "LayerRule":
+        return LayerRule(pattern)
+
+    @staticmethod
+    def use(pattern: str, spec: TensorSpec) -> "LayerRule":
+        return LayerRule(pattern, spec=spec)
+
+    @staticmethod
+    def override(pattern: str, **fields) -> "LayerRule":
+        norm = tuple(
+            (k, tuple(v) if isinstance(v, (list, tuple)) else v)
+            for k, v in sorted(fields.items())
+        )
+        return LayerRule(pattern, overrides=norm)
+
+    def matches(self, path: str) -> bool:
+        if self.pattern.startswith("re:"):
+            return re.search(self.pattern[3:], path) is not None
+        return fnmatch.fnmatchcase(path, self.pattern)
+
+    def resolve(self, base: Optional[TensorSpec]) -> Optional[TensorSpec]:
+        if self.overrides:
+            src = self.spec if self.spec is not None else base
+            if src is None:
+                raise ValueError(
+                    f"rule {self.pattern!r} overrides fields but there is no base spec"
+                )
+            return replace(src, **dict(self.overrides))
+        return self.spec
+
+
+# Paper convention (and prior deployment practice): embeddings, lm_head, the
+# MoE router, all norms, biases and the SSM state/scan parameters stay high
+# precision.  Bias rules match the repo's bias leaf names EXACTLY (``b``,
+# ``bq``/``bk``/``bv``, ``*_b``) -- scan-stacked biases are (L, N) arrays that
+# would otherwise pass the 2-D eligibility check once L is a block multiple;
+# this also keeps ``q_b``/``kv_b`` dense (the absorbed MLA decode contracts
+# ``kv_b`` as a raw array).  Stacked (E, d, f) MoE expert banks stay dense in
+# *packed* mode until a stacked packed kernel lands (fakequant still
+# quantizes them in moe_forward).  Unlike the old name-substring skip list,
+# nothing here matches on a bare "b" prefix -- a ``bottleneck`` projection
+# quantizes like any weight.
+DEFAULT_DENSE_RULES: Tuple[LayerRule, ...] = (
+    LayerRule.dense("*embed*"),
+    LayerRule.dense("*lm_head*"),
+    LayerRule.dense("*router*"),
+    LayerRule.dense("*norm*"),
+    LayerRule.dense("*ln*"),
+    LayerRule.dense("*conv*"),
+    LayerRule.dense("*experts*"),
+    LayerRule.dense("re:(^|/)a_param$"),
+    LayerRule.dense("re:(^|/)A_log$"),
+    LayerRule.dense("re:(^|/)D$"),
+    LayerRule.dense("re:(^|/)dt_bias$"),
+    LayerRule.dense("re:(^|/)b[qkv]?$"),
+    LayerRule.dense("re:(^|/)\\w*_b$"),
+)
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    """A whole-model quantization policy: per-role specs + per-layer rules."""
+
+    weight: TensorSpec = field(default_factory=TensorSpec.dense)
+    act: Optional[TensorSpec] = None
+    kv: Optional[TensorSpec] = None
+    rules: Tuple[LayerRule, ...] = DEFAULT_DENSE_RULES
+
+    def __post_init__(self):
+        object.__setattr__(self, "rules", tuple(self.rules))
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def bf16(cls) -> "QuantPolicy":
+        return cls()
+
+    @classmethod
+    def fakequant(
+        cls,
+        weight_format: str = "razer",
+        act_format: Optional[str] = None,
+        *,
+        weight_scale_fmt: str = "e3m3",
+        act_scale_fmt: str = "e4m3",
+        weight_svs: Sequence[float] = WEIGHT_SPECIAL_VALUES,
+        act_svs: Sequence[float] = ACT_SPECIAL_VALUES,
+        block_size: int = 16,
+        ste: bool = False,
+        rules: Tuple[LayerRule, ...] = DEFAULT_DENSE_RULES,
+    ) -> "QuantPolicy":
+        """Accuracy-experiment policy (the old flat-config surface)."""
+        act = None
+        if act_format is not None:
+            act = TensorSpec.act(
+                act_format,
+                scale_fmt=act_scale_fmt,
+                special_values=tuple(act_svs),
+                block_size=block_size,
+                ste=ste,
+            )
+        return cls(
+            weight=TensorSpec.weight(
+                weight_format,
+                mode="fakequant",
+                scale_fmt=weight_scale_fmt,
+                special_values=tuple(weight_svs),
+                block_size=block_size,
+                ste=ste,
+            ),
+            act=act,
+            rules=rules,
+        )
+
+    @classmethod
+    def packed(
+        cls,
+        format: str = "razer",
+        *,
+        weight_svs: Sequence[float] = WEIGHT_SPECIAL_VALUES,
+        block_size: int = 16,
+        kv_quant: bool = False,
+        rules: Tuple[LayerRule, ...] = DEFAULT_DENSE_RULES,
+    ) -> "QuantPolicy":
+        """Deployment policy: 4.5-bit wire-format weights (+ optional KV)."""
+        return cls(
+            weight=TensorSpec.weight(
+                format, mode="packed", special_values=tuple(weight_svs), block_size=block_size
+            ),
+            kv=TensorSpec.kv(format) if kv_quant else None,
+            rules=rules,
+        )
+
+    def with_rules(self, *rules: LayerRule, prepend: bool = True) -> "QuantPolicy":
+        """A copy with extra rules (prepended by default: first match wins)."""
+        new = tuple(rules) + self.rules if prepend else self.rules + tuple(rules)
+        return replace(self, rules=new)
+
+    # -- per-layer resolution ------------------------------------------------
+    def resolve(self, path: str) -> Optional[TensorSpec]:
+        """The weight TensorSpec for a param-tree path (None => keep dense).
+
+        First matching rule wins; unmatched paths use the base weight spec."""
+        spec: Optional[TensorSpec] = self.weight
+        for rule in self.rules:
+            if rule.matches(path):
+                spec = rule.resolve(self.weight)
+                break
+        if spec is None or not spec.quantizes:
+            return None
+        return spec
+
+    # -- legacy-compat surface (mirrors the old QuantConfig attributes) ------
+    @property
+    def mode(self) -> str:
+        w = self.weight
+        return "bf16" if (w is None or w.format is None) else w.mode
+
+    @property
+    def act_format(self) -> Optional[str]:
+        return self.act.format if self.act is not None else None
+
+    @property
+    def kv_format(self) -> Optional[str]:
+        return self.kv.format if self.kv is not None else None
+
+    @property
+    def block_size(self) -> int:
+        return self.weight.block_size
+
+    @property
+    def ste(self) -> bool:
+        return bool(self.weight.ste or (self.act is not None and self.act.ste))
+
+    @property
+    def sv_magnitudes(self) -> Tuple[float, float]:
+        return self.weight.sv_magnitudes
+
+
+BF16 = QuantPolicy.bf16()
+
+
+def as_policy(q: Union["QuantPolicy", Any, None]) -> QuantPolicy:
+    """Normalize any quant argument -- QuantPolicy, legacy QuantConfig (via
+    its ``to_policy()``), or None -- into a QuantPolicy."""
+    if q is None:
+        return BF16
+    if isinstance(q, QuantPolicy):
+        return q
+    to_policy = getattr(q, "to_policy", None)
+    if callable(to_policy):
+        return to_policy()
+    raise TypeError(f"cannot interpret {type(q).__name__} as a QuantPolicy")
+
+
+def tree_paths(tree, sep: str = "/"):
+    """Yield (path, leaf) pairs for a nested-dict param tree, '/'-joined --
+    the path vocabulary LayerRules match against."""
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            for p, leaf in tree_paths(v, sep):
+                yield (f"{k}{sep}{p}" if p else str(k)), leaf
+    else:
+        yield "", tree

@@ -1,50 +1,50 @@
 """Quantized linear layer -- the integration point between the RaZeR numerics
 and the model zoo / serving engine.
 
-Modes:
+Modes (per TensorSpec):
   * ``bf16``      -- plain matmul (training / FP16 baseline rows).
   * ``fakequant`` -- quantize-dequantize W (offline semantics) and optionally A
                      (dynamic, Eq. 6 with the activation SV pair) then matmul in
                      bf16.  Bit-exact simulation of RaZeR arithmetic; used for
                      every accuracy experiment.  Optional straight-through
                      estimator for QAT (beyond-paper).
-  * ``packed``    -- W stored in the 4.5-bit wire format; forward runs the
-                     Pallas kernel (TPU) or its jnp reference (CPU).  Used by
-                     the serving engine; this is the Marlin-kernel analogue.
+  * ``packed``    -- W stored in the format's wire container; forward runs the
+                     registered matmul kernel (Pallas on TPU, jnp reference on
+                     CPU).  Used by the serving engine; the Marlin analogue.
+
+Every entry point accepts either the new ``QuantPolicy`` (core.policy) or the
+legacy flat ``QuantConfig`` below, which survives as a thin back-compat
+constructor: ``QuantConfig(...).to_policy()`` is called internally via
+``as_policy`` so existing call sites keep working bit-exactly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from .baselines import fouroversix_quantize, int4_quantize, mxfp4_quantize, nf4_quantize
-from .nvfp4 import nvfp4_quantize
-from .packing import PackedRazerWeight, pack_weight
-from .razer import ACT_SPECIAL_VALUES, razer_quantize
+from . import registry
+from .policy import QuantPolicy, TensorSpec, as_policy
+from .razer import ACT_SPECIAL_VALUES, WEIGHT_SPECIAL_VALUES
 
 __all__ = ["QuantConfig", "QuantizedLinear", "qdq_weight", "qdq_activation", "qlinear"]
 
-_FORMATS = {
-    "nvfp4": nvfp4_quantize,
-    "razer": razer_quantize,
-    "mxfp4": mxfp4_quantize,
-    "int4": int4_quantize,
-    "nf4": nf4_quantize,
-    "fouroversix": fouroversix_quantize,
-}
+QuantLike = Union[QuantPolicy, "QuantConfig", None]
 
 
 @dataclass(frozen=True)
 class QuantConfig:
-    """Hashable (static-arg friendly) quantization policy."""
+    """Legacy flat quantization config (hashable / static-arg friendly).
+
+    Kept as a convenience constructor over the policy API; new code should
+    build a ``QuantPolicy`` directly (per-layer rules, pluggable formats)."""
 
     mode: str = "bf16"  # bf16 | fakequant | packed
     weight_format: str = "razer"
     act_format: Optional[str] = None  # None = weight-only quantization
-    weight_svs: Tuple[float, ...] = (5.0, -5.0, 8.0, -8.0)
+    weight_svs: Tuple[float, ...] = WEIGHT_SPECIAL_VALUES
     act_svs: Tuple[float, ...] = ACT_SPECIAL_VALUES
     block_size: int = 16
     weight_scale_fmt: str = "e3m3"  # §4.1: E3M3 for weights
@@ -52,56 +52,101 @@ class QuantConfig:
     kv_format: Optional[str] = None  # e.g. 'razer' to quantize the KV cache
     ste: bool = False  # straight-through estimator (QAT, beyond-paper)
 
+    def to_policy(self) -> QuantPolicy:
+        """The equivalent QuantPolicy (with the default dense per-layer rules)."""
+        weight = TensorSpec(
+            format=self.weight_format,
+            mode=self.mode,
+            block_size=self.block_size,
+            scale_fmt=self.weight_scale_fmt,
+            special_values=self.weight_svs,
+            ste=self.ste,
+        )
+        act = None
+        if self.act_format is not None:
+            act = TensorSpec(
+                format=self.act_format,
+                mode="fakequant",
+                block_size=self.block_size,
+                scale_fmt=self.act_scale_fmt,
+                special_values=self.act_svs,
+                ste=self.ste,
+            )
+        kv = TensorSpec.kv(self.kv_format) if self.kv_format is not None else None
+        return QuantPolicy(weight=weight, act=act, kv=kv)
+
     @property
     def sv_magnitudes(self) -> Tuple[float, float]:
-        mags = sorted({abs(v) for v in self.weight_svs})
-        assert len(mags) == 2, "packed path expects 2 SV pairs"
-        return (mags[0], mags[1])
+        """Wire-format pair magnitudes; 1 pair duplicates, >2 is an error."""
+        return self.to_policy().weight.sv_magnitudes
 
 
-def _format_kwargs(cfg: QuantConfig, weight: bool) -> dict:
-    fmt = cfg.weight_format if weight else cfg.act_format
-    kw = {"block_size": cfg.block_size}
-    if fmt in ("nvfp4", "fouroversix"):
-        kw["scale_fmt"] = cfg.weight_scale_fmt if weight else cfg.act_scale_fmt
-    if fmt == "razer":
-        kw["scale_fmt"] = cfg.weight_scale_fmt if weight else cfg.act_scale_fmt
-        kw["special_values"] = cfg.weight_svs if weight else cfg.act_svs
-    if fmt in ("mxfp4", "int4", "nf4"):
-        kw["block_size"] = max(cfg.block_size, 32) if fmt == "mxfp4" else cfg.block_size
-    return kw
+# ---------------------------------------------------------------------------
+# deprecated registry views (old private API, kept for external callers)
+# ---------------------------------------------------------------------------
+class _RegistryFormats(Mapping):
+    """dict-like view of the format registry's quantize fns (old ``_FORMATS``)."""
+
+    def __getitem__(self, name):
+        return registry.get_format(name).quantize
+
+    def __iter__(self):
+        return iter(registry.format_names())
+
+    def __len__(self):
+        return len(registry.format_names())
 
 
-def qdq_weight(w, cfg: QuantConfig):
+_FORMATS = _RegistryFormats()
+
+
+def _format_kwargs(cfg: QuantLike, weight: bool) -> dict:
+    """Deprecated: quantize-fn kwargs for a legacy config's weight/act role."""
+    pol = as_policy(cfg)
+    spec = pol.weight if weight else pol.act
+    if spec is None:
+        raise ValueError("config has no activation spec (act_format=None)")
+    return registry.spec_kwargs(spec.entry, spec)
+
+
+# ---------------------------------------------------------------------------
+# fake-quant entry points
+# ---------------------------------------------------------------------------
+def qdq_weight(w, cfg: QuantLike):
     """Fake-quantize a (d_in, d_out) weight along the reduction dim (axis 0)."""
-    fn = _FORMATS[cfg.weight_format]
-    orig = w.dtype
-    out = fn(w.astype(jnp.float32), axis=0, **_format_kwargs(cfg, weight=True)).dequantize()
-    return out.astype(orig)
+    return as_policy(cfg).weight.qdq(w, axis=0)
 
 
-def qdq_activation(x, cfg: QuantConfig):
+def qdq_activation(x, cfg: QuantLike):
     """Dynamically fake-quantize activations along the feature dim (axis -1)."""
-    fn = _FORMATS[cfg.act_format]
-    orig = x.dtype
-    xq = fn(x.astype(jnp.float32), axis=-1, **_format_kwargs(cfg, weight=False)).dequantize()
-    xq = xq.astype(orig)
-    if cfg.ste:
+    pol = as_policy(cfg)
+    spec = pol.act
+    if spec is None:
+        raise ValueError(
+            "qdq_activation called but the policy has no activation spec "
+            "(act_format=None means weight-only quantization)"
+        )
+    xq = spec.qdq(x, axis=-1)
+    if spec.ste:
         xq = x + jax.lax.stop_gradient(xq - x)
     return xq
 
 
+# ---------------------------------------------------------------------------
+# the linear layer
+# ---------------------------------------------------------------------------
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class QuantizedLinear:
     """A linear layer's parameter bundle under a quantization policy.
 
-    Holds either a dense weight (bf16/fakequant modes) or a PackedRazerWeight
-    (packed mode).  Pytree-registered so it can live inside model param trees,
-    be sharded by pjit and stand in as ShapeDtypeStructs for the dry-run.
+    Holds either a dense weight (bf16/fakequant modes) or a packed wire-format
+    container (packed mode).  Pytree-registered so it can live inside model
+    param trees, be sharded by pjit and stand in as ShapeDtypeStructs for the
+    dry-run.
     """
 
-    w: object  # jnp.ndarray | PackedRazerWeight
+    w: object  # jnp.ndarray | packed container (registry packed_type)
     b: Optional[jnp.ndarray] = None
 
     def tree_flatten(self):
@@ -112,29 +157,37 @@ class QuantizedLinear:
         return cls(*children)
 
     @staticmethod
-    def create(w, cfg: QuantConfig, b=None) -> "QuantizedLinear":
-        if cfg.mode == "packed":
-            pw = pack_weight(
-                jnp.asarray(w, jnp.float32),
-                sv_magnitudes=cfg.sv_magnitudes,
-                block_size=cfg.block_size,
-            )
-            return QuantizedLinear(w=pw, b=b)
+    def create(w, cfg: QuantLike, b=None) -> "QuantizedLinear":
+        spec = as_policy(cfg).weight
+        if spec.quantizes and spec.mode == "packed":
+            return QuantizedLinear(w=spec.pack(jnp.asarray(w, jnp.float32)), b=b)
         return QuantizedLinear(w=w, b=b)
 
 
-def qlinear(x, lin, cfg: QuantConfig):
-    """y = quant(x) @ quant(W) + b under the configured mode."""
-    w, b = (lin.w, lin.b) if isinstance(lin, QuantizedLinear) else (lin, None)
-    if cfg.mode == "packed" or isinstance(w, PackedRazerWeight):
-        from repro.kernels import ops  # lazy: kernels import core
+def qlinear(x, lin, cfg: QuantLike):
+    """y = quant(x) @ quant(W) + b under the configured policy.
 
-        y = ops.razer_matmul(x, w)
+    Packed containers dispatch to their format's registered matmul kernel by
+    container type -- no string keys, no core edits for new formats.  A dense
+    weight under a ``packed`` spec runs DENSE: in packed mode the per-layer
+    rules decided at pack time which weights stay high precision (embed,
+    kv_b, first-layer exceptions, ...), and honoring that here keeps e.g.
+    the absorbed MLA decode -- which contracts the dense kv_b directly --
+    numerically consistent with prefill.
+    """
+    w, b = (lin.w, lin.b) if isinstance(lin, QuantizedLinear) else (lin, None)
+    entry = registry.packed_entry(w)
+    if entry is not None:
+        if entry.matmul_kernel is None:
+            raise TypeError(f"format {entry.name!r} has a packed container but no matmul_kernel")
+        y = entry.matmul_kernel(x, w)
     else:
-        if cfg.mode == "fakequant":
-            w = qdq_weight(w, cfg)
-            if cfg.act_format is not None:
-                x = qdq_activation(x, cfg)
+        pol = as_policy(cfg)
+        spec = pol.weight
+        if spec.quantizes and spec.mode == "fakequant":
+            w = spec.qdq(w, axis=0)
+            if pol.act is not None:
+                x = qdq_activation(x, pol)
         y = x @ w.astype(x.dtype)
     if b is not None:
         y = y + b.astype(y.dtype)

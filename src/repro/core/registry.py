@@ -1,0 +1,211 @@
+"""Pluggable quantization-format registry.
+
+One place unifies what used to be three hard-coded tables:
+
+  * the quantize-fn lookup (``qlinear._FORMATS``),
+  * the packing decision (``pack_weight`` hard-wired in ``QuantizedLinear`` /
+    ``serving.engine.pack_model_weights``),
+  * the packed-matmul / fused-activation kernel dispatch (``kernels.ops``).
+
+A format is registered once with::
+
+    register_format(
+        "myfmt", my_quantize_fn,
+        pack_fn=my_pack,            # (w, spec) -> packed container (optional)
+        matmul_kernel=my_matmul,    # (x, packed) -> y                (optional)
+        act_kernel=my_act_qdq,      # (x, spec) -> fake-quantized x   (optional)
+        packed_type=MyPacked,       # container class for dispatch    (optional)
+    )
+
+and then flows through ``qlinear``, ``pack_model_weights`` and the serving
+engine without touching any core file: ``TensorSpec``/``QuantPolicy``
+(core.policy) resolve per-tensor/per-layer behavior against this registry.
+
+``quantize_fn`` has the ``BlockQuantized`` protocol: called as
+``fn(x, axis=..., **spec_kwargs)`` and must return an object with a
+``.dequantize()`` method.  ``spec_kwargs`` forwards only the keyword arguments
+the function's signature accepts (``block_size``, ``scale_fmt``,
+``special_values``) so simple formats stay simple.
+
+The paper's formats (nvfp4, razer) and the §5.1 baselines (mxfp4, int4, nf4,
+fouroversix) self-register at the bottom of this module.  RaZeR's Pallas
+kernels are registered through lazy wrappers because ``repro.kernels`` imports
+``repro.core`` (not the other way around).
+"""
+from __future__ import annotations
+
+import inspect
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = [
+    "FormatEntry",
+    "register_format",
+    "unregister_format",
+    "get_format",
+    "format_names",
+    "packed_entry",
+    "spec_kwargs",
+]
+
+
+@dataclass(frozen=True)
+class FormatEntry:
+    """Everything the policy layer needs to know about one element format."""
+
+    name: str
+    quantize: Callable  # (x, axis=..., **kw) -> BlockQuantized-like
+    pack_fn: Optional[Callable] = None  # (w, spec) -> packed container
+    matmul_kernel: Optional[Callable] = None  # (x, packed) -> y
+    act_kernel: Optional[Callable] = None  # (x, spec) -> fake-quantized x
+    packed_type: Optional[type] = None  # container class for type dispatch
+    min_block_size: int = 1  # e.g. 32 for OCP MXFP4
+    takes_scale_fmt: bool = False
+    takes_special_values: bool = False
+
+    @property
+    def packable(self) -> bool:
+        return self.pack_fn is not None
+
+
+_REGISTRY: Dict[str, FormatEntry] = {}
+
+
+def _accepted_kwargs(fn: Callable) -> Tuple[bool, bool]:
+    """(takes_scale_fmt, takes_special_values) from the function signature.
+
+    A ``**kwargs`` catch-all counts as accepting both (the fn opted into
+    ignoring what it does not use, like the mxfp4/int4/nf4 baselines)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # builtins / C callables: be permissive
+        return True, True
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()):
+        return True, True
+    return "scale_fmt" in params, "special_values" in params
+
+
+def register_format(
+    name: str,
+    quantize_fn: Callable,
+    pack_fn: Optional[Callable] = None,
+    matmul_kernel: Optional[Callable] = None,
+    act_kernel: Optional[Callable] = None,
+    *,
+    packed_type: Optional[type] = None,
+    min_block_size: int = 1,
+    overwrite: bool = False,
+) -> FormatEntry:
+    """Register (or re-register with ``overwrite=True``) an element format."""
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(
+            f"format {name!r} is already registered; pass overwrite=True to replace it"
+        )
+    takes_scale_fmt, takes_special_values = _accepted_kwargs(quantize_fn)
+    entry = FormatEntry(
+        name=name,
+        quantize=quantize_fn,
+        pack_fn=pack_fn,
+        matmul_kernel=matmul_kernel,
+        act_kernel=act_kernel,
+        packed_type=packed_type,
+        min_block_size=min_block_size,
+        takes_scale_fmt=takes_scale_fmt,
+        takes_special_values=takes_special_values,
+    )
+    _REGISTRY[name] = entry
+    return entry
+
+
+def unregister_format(name: str) -> None:
+    """Remove a format (tests register throwaway formats)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_format(name: str) -> FormatEntry:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown quantization format {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def format_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def packed_entry(obj) -> Optional[FormatEntry]:
+    """The FormatEntry whose packed container type matches ``obj`` (or None).
+
+    This is how ``qlinear`` dispatches a packed weight to its matmul kernel
+    without a string key: the container class *is* the key."""
+    for entry in _REGISTRY.values():
+        if entry.packed_type is not None and isinstance(obj, entry.packed_type):
+            return entry
+    return None
+
+
+def spec_kwargs(entry: FormatEntry, spec) -> dict:
+    """The kwargs ``entry.quantize`` receives for a given TensorSpec.
+
+    Forwards only what the quantize fn accepts; enforces the format's minimum
+    block size (OCP MXFP4 blocks are 32 even under a block-16 policy)."""
+    kw = {"block_size": max(spec.block_size, entry.min_block_size)}
+    if entry.takes_scale_fmt and spec.scale_fmt is not None:
+        kw["scale_fmt"] = spec.scale_fmt
+    if entry.takes_special_values and spec.special_values is not None:
+        kw["special_values"] = spec.special_values
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# built-in formats (self-registering)
+# ---------------------------------------------------------------------------
+def _razer_pack(w, spec):
+    from .packing import pack_weight
+
+    return pack_weight(w, sv_magnitudes=spec.sv_magnitudes, block_size=spec.block_size)
+
+
+def _razer_matmul(x, pw):
+    # lazy: repro.kernels imports repro.core, so core registers a thunk
+    from repro.kernels import ops
+
+    return ops.razer_matmul(x, pw)
+
+
+def _razer_act_qdq(x, spec):
+    from repro.kernels import ops
+
+    return ops.razer_act_qdq(x, svs=spec.special_values, block=spec.block_size)
+
+
+def _register_builtins() -> None:
+    from .baselines import (
+        fouroversix_quantize,
+        int4_quantize,
+        mxfp4_quantize,
+        nf4_quantize,
+    )
+    from .nvfp4 import nvfp4_quantize
+    from .packing import PackedRazerWeight
+    from .razer import razer_quantize
+
+    register_format("nvfp4", nvfp4_quantize, overwrite=True)
+    register_format(
+        "razer",
+        razer_quantize,
+        pack_fn=_razer_pack,
+        matmul_kernel=_razer_matmul,
+        act_kernel=_razer_act_qdq,
+        packed_type=PackedRazerWeight,
+        overwrite=True,
+    )
+    register_format("mxfp4", mxfp4_quantize, min_block_size=32, overwrite=True)
+    register_format("int4", int4_quantize, overwrite=True)
+    register_format("nf4", nf4_quantize, overwrite=True)
+    register_format("fouroversix", fouroversix_quantize, overwrite=True)
+
+
+_register_builtins()

@@ -3,6 +3,12 @@
 Handles: CPU-vs-TPU dispatch (interpret mode / jnp reference on CPU), batch
 flattening, M-padding, block-size selection, and the deferred tensor-scale
 multiply.  Models and the serving engine call these -- never the raw kernels.
+
+Format-generic callers should use ``quantized_matmul`` / ``quantized_act_qdq``,
+which dispatch through the core format registry by packed-container type /
+TensorSpec: a new format registered via ``core.registry.register_format`` flows
+through without edits here.  The razer-specific entry points below are that
+format's registered kernels.
 """
 from __future__ import annotations
 
@@ -11,13 +17,43 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.core.packing import PackedRazerWeight
 
 from . import ref
 from .razer_matmul import razer_matmul_pallas
 from .razer_quantize import razer_act_qdq_pallas
 
-__all__ = ["razer_matmul", "razer_act_qdq", "on_tpu", "pick_blocks"]
+__all__ = [
+    "razer_matmul",
+    "razer_act_qdq",
+    "quantized_matmul",
+    "quantized_act_qdq",
+    "on_tpu",
+    "pick_blocks",
+]
+
+
+def quantized_matmul(x, pw):
+    """y = x @ dequant(pw) for ANY registered format's packed container.
+
+    Dispatches by container type through the format registry -- the packed
+    analogue of ``jnp.dot``, and what ``qlinear`` uses under the hood."""
+    entry = registry.packed_entry(pw)
+    if entry is None or entry.matmul_kernel is None:
+        raise TypeError(
+            f"no registered matmul kernel for packed container {type(pw).__name__}"
+        )
+    return entry.matmul_kernel(x, pw)
+
+
+def quantized_act_qdq(x, spec):
+    """Fused dynamic activation fake-quant for a TensorSpec, if the spec's
+    format registered an act kernel; falls back to the spec's qdq numerics."""
+    entry = registry.get_format(spec.format)
+    if entry.act_kernel is not None:
+        return entry.act_kernel(x, spec)
+    return spec.qdq(x, axis=-1)
 
 
 def on_tpu() -> bool:

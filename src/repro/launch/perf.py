@@ -86,7 +86,7 @@ VARIANTS = {
 def build_lowered_serve_variant(cfg, shape, mesh, *, packed: bool, kv_quant: bool,
                                 donate: bool = False):
     """decode-step lowering with RaZeR-packed weights and/or packed KV cache."""
-    from repro.core.qlinear import QuantConfig
+    from repro.core.policy import QuantPolicy
     from repro.serving.engine import pack_model_weights
     from repro.serving.kvcache import quantized_gqa_cache_init
 
@@ -97,7 +97,7 @@ def build_lowered_serve_variant(cfg, shape, mesh, *, packed: bool, kv_quant: boo
         lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), params_shape
     )
     if packed:
-        qc = QuantConfig(mode="packed")
+        qc = QuantPolicy.packed()
         params_shape = jax.eval_shape(lambda p: pack_model_weights(p, cfg, qc), params_shape)
     p_shard = param_sharding_tree(params_shape, mesh)
 
@@ -148,7 +148,9 @@ def measure(cfg, shape, mesh, build_fn) -> Dict:
     ma = compiled.memory_analysis()
     rec["temp_gb"] = round(ma.temp_size_in_bytes / 1e9, 2)
     rec["args_gb"] = round(ma.argument_size_in_bytes / 1e9, 3)
-    ca = compiled.cost_analysis()
+    from repro.launch.costmodel import xla_cost_analysis
+
+    ca = xla_cost_analysis(compiled)
     rec["flops_raw"] = float(ca.get("flops", 0))
     rec["bytes_raw"] = float(ca.get("bytes accessed", 0))
     rec["coll_raw"] = collective_bytes(compiled.as_text()).get("total", 0.0)

@@ -12,7 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import QuantPolicy
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
 
@@ -50,7 +50,7 @@ def main(argv=None):
         max_len=args.max_len,
         max_new_tokens=args.max_new,
         kv_quant=args.kv_quant,
-        quant=QuantConfig(mode="packed") if args.packed else QuantConfig(mode="bf16"),
+        quant=QuantPolicy.packed() if args.packed else QuantPolicy.bf16(),
     )
     eng = Engine(params, cfg, scfg)
 

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import QuantPolicy
 from repro.models import transformer as tf
 from repro.parallel.sharding import param_sharding_tree, sharding_ctx
 from repro.train.checkpoint import CheckpointManager, latest_step, restore_checkpoint
@@ -51,7 +51,7 @@ def main(argv=None):
 
         mesh = make_production_mesh(multi_pod=args.mesh == "multi")
 
-    quant = QuantConfig(mode="fakequant", ste=True) if args.qat else QuantConfig(mode="bf16")
+    quant = QuantPolicy.fakequant(ste=True) if args.qat else QuantPolicy.bf16()
     ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1), total_steps=args.steps)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch)
     ds = SyntheticLM(dcfg)

@@ -17,7 +17,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import QuantConfig, QuantizedLinear, qlinear
+from repro.core.qlinear import QuantLike, QuantizedLinear, qlinear
 
 from .config import ArchConfig
 from .layers import DEFAULT_QUANT, apply_mrope, apply_rope, dense_init, rms_norm
@@ -237,7 +237,7 @@ def gqa_init(key, cfg: ArchConfig, dtype=jnp.float32):
     return p
 
 
-def _qkv(x, p, cfg: ArchConfig, quant: QuantConfig, positions, positions3=None):
+def _qkv(x, p, cfg: ArchConfig, quant: QuantLike, positions, positions3=None):
     b, s, _ = x.shape
     hd = cfg.hd
     q = qlinear(x, QuantizedLinear(p["wq"], p.get("bq")), quant).reshape(b, s, cfg.num_heads, hd)
@@ -258,7 +258,7 @@ def _qkv(x, p, cfg: ArchConfig, quant: QuantConfig, positions, positions3=None):
     return q, k, v
 
 
-def gqa_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT,
+def gqa_forward(x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT,
                 positions=None, positions3=None, window: int = 0, causal: bool = True):
     """Full-sequence attention (causal by default; whisper encoder sets False)."""
     b, s, _ = x.shape
@@ -269,7 +269,7 @@ def gqa_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT,
     return qlinear(out.reshape(b, s, -1), p["wo"], quant)
 
 
-def gqa_decode(x, p, cfg: ArchConfig, cache, cur_len, *, quant: QuantConfig = DEFAULT_QUANT,
+def gqa_decode(x, p, cfg: ArchConfig, cache, cur_len, *, quant: QuantLike = DEFAULT_QUANT,
                window: int = 0, positions3=None):
     """One-token decode. cache = dict(k, v) [bf16] or the RaZeR-packed layout
     from serving.kvcache (paper App. C.1).  cur_len: scalar or (B,) vector
@@ -353,7 +353,7 @@ def _mla_ckv(x, p, cfg: ArchConfig, quant, positions):
     return c, k_rope
 
 
-def mla_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT, positions=None):
+def mla_forward(x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT, positions=None):
     """Materialized MLA for train/prefill."""
     b, s, _ = x.shape
     h, dn, dr, dv = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -378,7 +378,7 @@ def _pad_v(v, hd):
     return jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, hd - dv)))
 
 
-def mla_decode(x, p, cfg: ArchConfig, cache, cur_len, *, quant: QuantConfig = DEFAULT_QUANT):
+def mla_decode(x, p, cfg: ArchConfig, cache, cur_len, *, quant: QuantLike = DEFAULT_QUANT):
     """Absorbed MLA decode: cache holds (c_kv, k_rope) only."""
     b = x.shape[0]
     h, dn, dr, dv = cfg.num_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
@@ -436,7 +436,7 @@ def cross_init(key, cfg: ArchConfig, dtype=jnp.float32):
     }
 
 
-def cross_forward(x, enc, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT):
+def cross_forward(x, enc, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT):
     """x: (B, Sd, d) queries; enc: (B, Se, d) encoder output (non-causal)."""
     b, sd, _ = x.shape
     se = enc.shape[1]

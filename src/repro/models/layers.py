@@ -4,8 +4,8 @@ Conventions:
   * params are float32 "master" copies; forward casts to cfg.compute_dtype.
   * weights are (d_in, d_out) so the quantization reduction dim is axis 0,
     matching core.qlinear / the packed kernel layout.
-  * every linear goes through qlinear() so a QuantConfig turns any model into
-    its fake-quant / packed counterpart.
+  * every linear goes through qlinear() so a QuantPolicy (or a legacy
+    QuantConfig) turns any model into its fake-quant / packed counterpart.
 """
 from __future__ import annotations
 
@@ -14,10 +14,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import QuantConfig, qlinear
+from repro.core.policy import BF16
+from repro.core.qlinear import QuantLike, qlinear
 from repro.parallel.sharding import shard_activation
 
-DEFAULT_QUANT = QuantConfig(mode="bf16")
+DEFAULT_QUANT = BF16  # dense QuantPolicy
 
 
 def dense_init(key, d_in, d_out, scale=None, dtype=jnp.float32):
@@ -94,7 +95,7 @@ def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
     }
 
 
-def swiglu(x, p, quant: QuantConfig = DEFAULT_QUANT):
+def swiglu(x, p, quant: QuantLike = DEFAULT_QUANT):
     h = jax.nn.silu(qlinear(x, p["gate"], quant)) * qlinear(x, p["up"], quant)
     h = shard_activation(h, "ffn")
     return qlinear(h, p["down"], quant)
@@ -110,7 +111,7 @@ def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
     }
 
 
-def gelu_mlp(x, p, quant: QuantConfig = DEFAULT_QUANT):
+def gelu_mlp(x, p, quant: QuantLike = DEFAULT_QUANT):
     from repro.core.qlinear import QuantizedLinear
 
     h = jax.nn.gelu(qlinear(x, QuantizedLinear(p["up"], p["up_b"]), quant))
@@ -129,7 +130,7 @@ def embed(tokens, table, compute_dtype=jnp.bfloat16):
     return table.astype(compute_dtype)[tokens]
 
 
-def unembed(x, table, quant: QuantConfig = DEFAULT_QUANT):
+def unembed(x, table, quant: QuantLike = DEFAULT_QUANT):
     """lm head; (vocab, d) table used transposed -- left unquantized by default
     (the paper, like most PTQ work, keeps embeddings/lm_head high precision)."""
     return x @ table.T.astype(x.dtype)

@@ -18,7 +18,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import QuantConfig, qlinear
+from repro.core.policy import as_policy
+from repro.core.qlinear import QuantLike, qlinear
 from repro.parallel.sharding import get_ctx, shard_activation
 
 from .config import ArchConfig
@@ -88,7 +89,7 @@ def _group_combine(h, slot_expert, slot_pos, keep, slot_token, topw, tg: int):
 
 
 def moe_forward(
-    x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT
+    x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) -> (y, aux_loss). Router kept f32 (DESIGN.md §4)."""
     b, s, d = x.shape
@@ -120,12 +121,12 @@ def moe_forward(
     buf = shard_activation(buf, "moe_buf")  # (g, e, cap, d)
 
     we = p["experts"]
-    if quant.mode == "fakequant":
-        from repro.core.qlinear import _FORMATS, _format_kwargs
-
-        qfn = _FORMATS[quant.weight_format]
-        kw = _format_kwargs(quant, weight=True)
-        we = {k_: qfn(v.astype(jnp.float32), axis=1, **kw).dequantize() for k_, v in we.items()}
+    wspec = as_policy(quant).weight
+    if wspec.quantizes and wspec.mode == "fakequant":
+        # fakequant quantizes the stacked (E, d, f) expert banks along d; the
+        # packed deployment path keeps them dense (policy DEFAULT_DENSE_RULES)
+        # until a stacked packed kernel lands.
+        we = {k_: wspec.qdq(v, axis=1) for k_, v in we.items()}
     hg = jnp.einsum("gecd,edf->gecf", buf, we["gate"].astype(buf.dtype))
     hu = jnp.einsum("gecd,edf->gecf", buf, we["up"].astype(buf.dtype))
     h = jax.nn.silu(hg) * hu

@@ -16,7 +16,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import QuantConfig, qlinear
+from repro.core.qlinear import QuantLike, qlinear
 
 from .config import ArchConfig
 from .layers import DEFAULT_QUANT, dense_init, rms_norm
@@ -129,7 +129,7 @@ def _ssd_chunked(xh, bmat, cmat, dt, a_log, chunk: int):
     return y, final_state
 
 
-def mamba2_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT):
+def mamba2_forward(x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT):
     """Full-sequence Mamba-2 block. x: (B, S, d_model)."""
     bsz, s, _ = x.shape
     d_inner, nheads = mamba2_dims(cfg)
@@ -157,7 +157,7 @@ def mamba2_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
     }
 
 
-def mamba2_decode(x, p, cfg: ArchConfig, state, *, quant: QuantConfig = DEFAULT_QUANT):
+def mamba2_decode(x, p, cfg: ArchConfig, state, *, quant: QuantLike = DEFAULT_QUANT):
     """One-token step. x: (B, 1, d_model) -> (y, state)."""
     bsz = x.shape[0]
     d_inner, nheads = mamba2_dims(cfg)
@@ -214,7 +214,7 @@ def _rglru_gates(xb, p, quant):
     return at, beta * gated_x
 
 
-def rglru_forward(x, p, cfg: ArchConfig, *, quant: QuantConfig = DEFAULT_QUANT):
+def rglru_forward(x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT):
     """Full-sequence Griffin recurrent block. x: (B, S, d_model)."""
     gate = jax.nn.gelu(qlinear(x, p["w_gate"], quant))
     xb = qlinear(x, p["w_in"], quant)
@@ -240,7 +240,7 @@ def rglru_state_init(cfg: ArchConfig, batch: int, dtype=jnp.float32):
     }
 
 
-def rglru_decode(x, p, cfg: ArchConfig, state, *, quant: QuantConfig = DEFAULT_QUANT):
+def rglru_decode(x, p, cfg: ArchConfig, state, *, quant: QuantLike = DEFAULT_QUANT):
     """One-token step. x: (B, 1, d_model) -> (y, state)."""
     xt = x[:, 0, :]
     gate = jax.nn.gelu(qlinear(xt, p["w_gate"], quant))

@@ -22,7 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qlinear import QuantConfig
+from repro.core.qlinear import QuantLike
 from repro.parallel.sharding import shard_activation
 
 from . import attention as attn
@@ -247,7 +247,7 @@ def _sinusoid(s: int, d: int):
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 
-def encode(params, frames, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT):
+def encode(params, frames, cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT):
     """frames: (B, S_enc, d_model) precomputed frame embeddings (stub)."""
     b, s, _ = frames.shape
     x = frames.astype(cfg.cdtype) + _sinusoid(s, cfg.d_model).astype(cfg.cdtype)
@@ -274,7 +274,7 @@ def forward_hidden(
     params,
     tokens,
     cfg: ArchConfig,
-    quant: QuantConfig = DEFAULT_QUANT,
+    quant: QuantLike = DEFAULT_QUANT,
     *,
     positions3=None,
     frontend_embeds=None,
@@ -321,7 +321,7 @@ def forward_hidden(
     return x, aux_total
 
 
-def forward_train(params, tokens, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT, **kw):
+def forward_train(params, tokens, cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT, **kw):
     """tokens: (B, S) -> (logits (B, S, V), aux_loss)."""
     x, aux_total = forward_hidden(params, tokens, cfg, quant, **kw)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
@@ -341,7 +341,7 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
-def prefill(params, tokens, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT,
+def prefill(params, tokens, cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT,
             *, max_len: int, positions3=None, frontend_embeds=None, enc_frames=None,
             last_positions=None):
     """Run the full prompt, building KV caches/states.
@@ -469,7 +469,7 @@ def _rglru_prefill(h, mp, cfg, quant):
 
 
 def decode_step(params, token, caches, cur_len, cfg: ArchConfig,
-                quant: QuantConfig = DEFAULT_QUANT, *, enc=None, positions3=None):
+                quant: QuantLike = DEFAULT_QUANT, *, enc=None, positions3=None):
     """token: (B,) int32 -> (logits (B, V), new caches)."""
     b = token.shape[0]
     x = embed(token[:, None], params["embed"], cfg.cdtype)
@@ -507,7 +507,7 @@ def _sinusoid_at(pos, d: int):
 # ---------------------------------------------------------------------------
 # loss
 # ---------------------------------------------------------------------------
-def lm_loss(params, batch, cfg: ArchConfig, quant: QuantConfig = DEFAULT_QUANT):
+def lm_loss(params, batch, cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT):
     """batch: dict(tokens (B,S), labels (B,S), [mask, frontend_embeds, enc_frames]).
 
     Memory-lean xent: loss = logsumexp(logits) - <x, head[label]>.  The only

@@ -10,13 +10,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import PackedRazerWeight, pack_weight
+from repro.core.policy import QuantPolicy, TensorSpec, as_policy
 from repro.core.qlinear import QuantConfig
 from repro.models import transformer as tf
 from repro.models.config import ArchConfig
@@ -28,44 +28,80 @@ class ServeConfig:
     max_len: int = 256
     max_new_tokens: int = 32
     kv_quant: bool = False  # RaZeR KV cache (App. C.1)
-    quant: QuantConfig = QuantConfig(mode="bf16")
+    quant: Union[QuantPolicy, QuantConfig] = QuantConfig(mode="bf16")
     eos_id: int = -1  # -1: never stop early
 
 
-# weights large enough to be worth packing (skip norms, biases, tiny projections)
+# weights large enough to be worth packing (skip tiny projections)
 _MIN_PACK = 16 * 16
 
 
-def pack_model_weights(params, cfg: ArchConfig, quant: QuantConfig):
-    """Offline PTQ: replace every eligible 2-D linear weight with its RaZeR
-    wire format.  Embedding/lm_head/router stay high precision (paper
-    convention); scan-stacked weights (leading layer dim) are packed per layer.
-    """
-    skip_names = ("embed", "lm_head", "router", "norm", "ln", "a_param", "conv", "A_log", "D", "dt_bias")
+def _packable(spec: TensorSpec, leaf, block_axis: int) -> bool:
+    """Structural eligibility: blocked axis divisible by the block size the
+    format will actually use, and big enough to matter."""
+    return (
+        hasattr(leaf, "ndim")
+        and leaf.shape[block_axis] % spec.effective_block_size == 0
+        and leaf.size >= _MIN_PACK
+    )
+
+
+def _apply_policy_to_weights(params, quant, leaf_fn):
+    """Shared rule-resolving tree walk: ``leaf_fn(spec, leaf)`` transforms
+    every leaf whose '/'-joined path resolves to a quantizing spec."""
+    policy = as_policy(quant)
 
     def walk(tree, path=""):
         if isinstance(tree, dict):
-            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
-        name = path.rsplit("/", 1)[-1]
-        if any(s in path for s in skip_names) or name.startswith("b") or name.endswith("_b"):
-            return tree
-        if tree.ndim == 2 and tree.shape[0] % 16 == 0 and tree.size >= _MIN_PACK:
-            return pack_weight(tree.astype(jnp.float32), sv_magnitudes=quant.sv_magnitudes,
-                               block_size=quant.block_size)
-        if tree.ndim == 3 and tree.shape[1] % 16 == 0 and tree.size >= _MIN_PACK:
-            # scan-stacked (L, d_in, d_out): pack per layer, stack the pieces
-            packed = [pack_weight(tree[i].astype(jnp.float32), sv_magnitudes=quant.sv_magnitudes,
-                                  block_size=quant.block_size) for i in range(tree.shape[0])]
-            return PackedRazerWeight(
-                codes=jnp.stack([p.codes for p in packed]),
-                scale_meta=jnp.stack([p.scale_meta for p in packed]),
-                tensor_scale=jnp.stack([p.tensor_scale for p in packed]),
-                sv_magnitudes=packed[0].sv_magnitudes,
-                shape=packed[0].shape,
-            )
-        return tree
+            return {k: walk(v, f"{path}/{k}" if path else str(k)) for k, v in tree.items()}
+        spec = policy.resolve(path)
+        return tree if spec is None else leaf_fn(spec, tree)
 
     return walk(params)
+
+
+def pack_model_weights(params, cfg: ArchConfig, quant: Union[QuantPolicy, QuantConfig]):
+    """Offline PTQ: replace every eligible 2-D linear weight with its format's
+    wire container, per the policy's per-layer rules.
+
+    Which tensors stay dense is decided by ``QuantPolicy.resolve`` on the
+    '/'-joined param path (default rules: embed/lm_head/router/norms/biases/
+    SSM state high precision, paper convention) -- not by name-substring
+    guesses, so a ``bottleneck`` projection packs like any other weight.
+    Scan-stacked weights (leading layer dim) are packed per layer and the
+    containers restacked leaf-wise, which works for any registered format's
+    container.
+    """
+
+    def pack_leaf(spec, leaf):
+        if spec.mode != "packed":
+            return leaf
+        if leaf.ndim == 2 and _packable(spec, leaf, 0):
+            return spec.pack(leaf.astype(jnp.float32))
+        if leaf.ndim == 3 and _packable(spec, leaf, 1):
+            # scan-stacked (L, d_in, d_out): pack per layer, stack the pieces
+            packed = [spec.pack(leaf[i].astype(jnp.float32)) for i in range(leaf.shape[0])]
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *packed)
+        return leaf
+
+    return _apply_policy_to_weights(params, quant, pack_leaf)
+
+
+def fakequant_model_weights(params, cfg: ArchConfig, quant: Union[QuantPolicy, QuantConfig]):
+    """Offline per-layer fake-quant: quantize-dequantize every eligible weight
+    under the policy's per-layer rules (the accuracy-experiment analogue of
+    ``pack_model_weights`` -- this is how rule-driven mixed precision, e.g.
+    calibrated per-layer SV magnitudes or first/last-layer higher precision,
+    enters a fakequant evaluation)."""
+
+    def qdq_leaf(spec, leaf):
+        if leaf.ndim == 2 and _packable(spec, leaf, 0):
+            return spec.qdq(leaf, axis=0)
+        if leaf.ndim == 3 and _packable(spec, leaf, 1):
+            return spec.qdq(leaf, axis=1)
+        return leaf
+
+    return _apply_policy_to_weights(params, quant, qdq_leaf)
 
 
 class Engine:
@@ -74,7 +110,10 @@ class Engine:
         self.scfg = serve_cfg
         self.mesh = mesh
         self.quant = serve_cfg.quant
-        if serve_cfg.quant.mode == "packed":
+        self.policy = as_policy(serve_cfg.quant)
+        # policy.kv implies a quantized cache even without the legacy flag
+        self.kv_quant = bool(serve_cfg.kv_quant or self.policy.kv is not None)
+        if self.policy.mode == "packed":
             params = pack_model_weights(params, cfg, serve_cfg.quant)
         self.params = params
         self._decode_jit = jax.jit(self._decode_step)
@@ -93,7 +132,7 @@ class Engine:
                 enc_frames=extras.get("enc_frames"),
                 last_positions=lengths,
             )
-            if self.scfg.kv_quant:
+            if self.kv_quant:
                 caches = self._quantize_caches(caches)
             return last, caches, enc
 
@@ -101,11 +140,12 @@ class Engine:
         """Convert bf16 GQA caches to the packed layout (App. C.1)."""
         from repro.serving.kvcache import kv_quantize
 
+        spec = self.policy.kv
         out = []
         for c in caches:
             if isinstance(c, dict) and "k" in c and c["k"].ndim == 5:
-                kc, km = kv_quantize(c["k"])
-                vc, vm = kv_quantize(c["v"])
+                kc, km = kv_quantize(c["k"], spec=spec)
+                vc, vm = kv_quantize(c["v"], spec=spec)
                 out.append({"k_codes": kc, "k_meta": km, "v_codes": vc, "v_meta": vm})
             else:
                 out.append(c)

@@ -19,10 +19,11 @@ import jax.numpy as jnp
 
 from repro.core.formats import FP4_NEG_ZERO_CODE, fp4_encode
 from repro.core.packing import pack_fp4_codes, pack_scale_meta, unpack_fp4_codes
-from repro.core.razer import razer_quantize
+from repro.core.policy import TensorSpec
 from repro.models.config import ArchConfig
 
 KV_SV = (5.0, -5.0)  # activation-style single pair
+KV_SPEC = TensorSpec.kv()  # razer, E4M3 scales, +-5 pair (QuantPolicy.kv default)
 
 
 def quantized_gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
@@ -37,24 +38,37 @@ def quantized_gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int) -> Dict:
     }
 
 
-def kv_quantize(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _check_kv_spec(spec: TensorSpec) -> TensorSpec:
+    """The KV wire format (and ``kv_dequantize``) is fixed: E4M3 scales,
+    16-element blocks, the single +-5 SV pair.  A policy kv spec that deviates
+    would encode bytes the decode path misreads -- fail loudly instead."""
+    if (
+        spec.format != "razer"
+        or spec.scale_fmt != "e4m3"
+        or spec.block_size != 16
+        or tuple(spec.special_values or ()) != KV_SV
+    ):
+        raise ValueError(
+            f"unsupported KV-cache spec {spec}; the packed KV wire format currently "
+            f"requires format='razer', scale_fmt='e4m3', block_size=16, "
+            f"special_values={KV_SV}"
+        )
+    return spec
+
+
+def kv_quantize(x, spec: TensorSpec = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x (..., hd) -> (codes (..., hd//2), meta (..., hd//16)).
 
-    Activation-style RaZeR: per-16-block E4M3 scale (no tensor scale), SV pair
-    +-5 selected per block, 1-bit metadata."""
-    bq = razer_quantize(
-        x.astype(jnp.float32),
-        special_values=KV_SV,
-        block_size=16,
-        scale_fmt="e4m3",
-        axis=-1,
-        tensor_scale=jnp.asarray(1.0, jnp.float32),
-    )
+    Activation-style RaZeR: per-block E4M3 scale (no tensor scale), one SV
+    pair selected per block, 1-bit metadata.  ``spec`` (a ``QuantPolicy.kv``
+    TensorSpec) is validated against the fixed wire layout."""
+    spec = _check_kv_spec(spec or KV_SPEC)
+    bq = spec.quantize(x.astype(jnp.float32), axis=-1, tensor_scale=jnp.asarray(1.0, jnp.float32))
     uses_sv = (bq.sv_index >= 0)[..., None] & (bq.q == bq.sv[..., None])
     codes = jnp.where(uses_sv, jnp.uint8(FP4_NEG_ZERO_CODE), fp4_encode(bq.q))
     lead = x.shape[:-1]
     codes = pack_fp4_codes(codes.reshape(*lead, x.shape[-1]))
-    meta = pack_scale_meta(bq.block_scale, bq.sv_index, weight=False, scale_fmt="e4m3")
+    meta = pack_scale_meta(bq.block_scale, bq.sv_index, weight=False, scale_fmt=spec.scale_fmt)
     return codes, meta.astype(jnp.uint8)
 
 

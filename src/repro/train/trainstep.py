@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.qlinear import QuantConfig
+from repro.core.policy import BF16
+from repro.core.qlinear import QuantLike
 from repro.models import transformer as tf
 from repro.models.config import ArchConfig
 from repro.parallel.sharding import (
@@ -23,14 +24,14 @@ from repro.parallel.sharding import (
 )
 from repro.train.optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
 
-DEFAULT_QUANT = QuantConfig(mode="bf16")
+DEFAULT_QUANT = BF16  # dense QuantPolicy
 
 
 # ---------------------------------------------------------------------------
 # train
 # ---------------------------------------------------------------------------
 def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig,
-                    quant: QuantConfig = DEFAULT_QUANT, microbatch: int = 0):
+                    quant: QuantLike = DEFAULT_QUANT, microbatch: int = 0):
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``microbatch`` > 0 enables gradient accumulation via lax.scan over
@@ -73,7 +74,7 @@ def make_train_step(cfg: ArchConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig,
 
 
 def bind_train_step(cfg: ArchConfig, mesh: Mesh, params_shape, opt_cfg: AdamWConfig,
-                    quant: QuantConfig = DEFAULT_QUANT, microbatch: int = 0,
+                    quant: QuantLike = DEFAULT_QUANT, microbatch: int = 0,
                     donate: bool = True):
     """Fully-sharded jitted train step, given the param ShapeDtype tree."""
     step = make_train_step(cfg, mesh, opt_cfg, quant, microbatch)
@@ -103,7 +104,7 @@ def bind_train_step(cfg: ArchConfig, mesh: Mesh, params_shape, opt_cfg: AdamWCon
 # serve
 # ---------------------------------------------------------------------------
 def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh], max_len: int,
-                      quant: QuantConfig = DEFAULT_QUANT):
+                      quant: QuantLike = DEFAULT_QUANT):
     def prefill(params, batch):
         with sharding_ctx(mesh):
             return tf.prefill(
@@ -117,7 +118,7 @@ def make_prefill_step(cfg: ArchConfig, mesh: Optional[Mesh], max_len: int,
 
 
 def make_decode_step(cfg: ArchConfig, mesh: Optional[Mesh],
-                     quant: QuantConfig = DEFAULT_QUANT):
+                     quant: QuantLike = DEFAULT_QUANT):
     def decode(params, token, caches, cur_len, enc=None):
         with sharding_ctx(mesh):
             return tf.decode_step(params, token, caches, cur_len, cfg, quant, enc=enc)

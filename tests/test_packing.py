@@ -2,8 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core import QuantConfig, QuantizedLinear, qlinear, razer_quantize
 from repro.core.packing import (

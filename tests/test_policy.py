@@ -1,0 +1,423 @@
+"""Quantization-policy API tests: registry, TensorSpec, per-layer rules,
+legacy QuantConfig shim equivalence, and the pluggable-format flow through
+qlinear / pack_model_weights / the serving engine."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.policy import (
+    DEFAULT_DENSE_RULES,
+    LayerRule,
+    QuantPolicy,
+    TensorSpec,
+    as_policy,
+    tree_paths,
+)
+from repro.core.qlinear import QuantConfig, QuantizedLinear, qdq_activation, qdq_weight, qlinear
+
+ALL_FORMATS = ("nvfp4", "razer", "mxfp4", "int4", "nf4", "fouroversix")
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        (np.random.default_rng(seed).standard_normal(shape) * scale).astype(np.float32)
+    )
+
+
+# ---------------------------------------------------------------------------
+# legacy QuantConfig -> policy equivalence (bit-exact)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", ALL_FORMATS)
+def test_fakequant_policy_matches_legacy_config(fmt):
+    x = _rand((4, 64), 1)
+    w = _rand((64, 32), 2)
+    cfg = QuantConfig(mode="fakequant", weight_format=fmt, act_format=fmt)
+    y_cfg = qlinear(x, w, cfg)
+    y_pol = qlinear(x, w, cfg.to_policy())
+    np.testing.assert_array_equal(np.asarray(y_cfg), np.asarray(y_pol))
+    # role-level entry points agree too
+    np.testing.assert_array_equal(
+        np.asarray(qdq_weight(w, cfg)), np.asarray(cfg.to_policy().weight.qdq(w, axis=0))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(qdq_activation(x, cfg)), np.asarray(qdq_activation(x, cfg.to_policy()))
+    )
+
+
+def test_packed_policy_matches_legacy_config():
+    x = _rand((4, 64), 3)
+    w = _rand((64, 32), 4)
+    lin_cfg = QuantizedLinear.create(w, QuantConfig(mode="packed"))
+    lin_pol = QuantizedLinear.create(w, QuantPolicy.packed())
+    np.testing.assert_array_equal(np.asarray(lin_cfg.w.codes), np.asarray(lin_pol.w.codes))
+    np.testing.assert_array_equal(
+        np.asarray(lin_cfg.w.scale_meta), np.asarray(lin_pol.w.scale_meta)
+    )
+    y_cfg = qlinear(x, lin_cfg, QuantConfig(mode="packed"))
+    y_pol = qlinear(x, lin_pol, QuantPolicy.packed())
+    np.testing.assert_array_equal(np.asarray(y_cfg), np.asarray(y_pol))
+
+
+def test_dense_weight_under_packed_policy_stays_dense():
+    """Per-layer dense exceptions inside a packed model run truly dense: the
+    rules decided at pack time what stays high precision, and qlinear must
+    honor that (e.g. absorbed MLA decode contracts the dense kv_b raw, so
+    prefill must not quantize it either)."""
+    x = _rand((2, 32), 5)
+    w = _rand((32, 16), 6)
+    y = qlinear(x, w, QuantPolicy.packed())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-6)
+
+
+def test_as_policy_normalizes():
+    assert as_policy(None).mode == "bf16"
+    pol = QuantPolicy.fakequant()
+    assert as_policy(pol) is pol
+    assert as_policy(QuantConfig(mode="fakequant")).mode == "fakequant"
+    with pytest.raises(TypeError):
+        as_policy(object())
+
+
+# ---------------------------------------------------------------------------
+# sv_magnitudes (1 pair duplicates; >2 pairs is a clear error)
+# ---------------------------------------------------------------------------
+def test_sv_magnitudes_single_pair_duplicates():
+    assert QuantConfig(weight_svs=(5.0, -5.0)).sv_magnitudes == (5.0, 5.0)
+    assert TensorSpec.weight(special_values=(5.0, -5.0)).sv_magnitudes == (5.0, 5.0)
+
+
+def test_sv_magnitudes_two_pairs():
+    assert QuantConfig().sv_magnitudes == (5.0, 8.0)
+
+
+def test_sv_magnitudes_three_pairs_raises():
+    with pytest.raises(ValueError, match="at most 2 SV pairs"):
+        _ = QuantConfig(weight_svs=(5.0, -5.0, 7.0, -7.0, 9.0, -9.0)).sv_magnitudes
+
+
+def test_single_pair_packed_path_works():
+    """Activation-style single-pair weight config packs and matmuls."""
+    w = _rand((64, 16), 7)
+    spec = TensorSpec.weight(mode="packed", special_values=(5.0, -5.0))
+    pw = spec.pack(w)
+    assert pw.sv_magnitudes == (5.0, 5.0)
+    y = qlinear(_rand((2, 64), 8), QuantizedLinear(pw), QuantPolicy(weight=spec))
+    assert y.shape == (2, 16) and bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# per-layer rules: ordering / first-match / override semantics
+# ---------------------------------------------------------------------------
+def test_rule_first_match_wins():
+    base = TensorSpec.weight()
+    pol = QuantPolicy(
+        weight=base,
+        rules=(
+            LayerRule.override("layers_0/*", special_values=(7.0, -7.0)),
+            LayerRule.dense("layers_*"),
+        ),
+    )
+    # layers_0 matches BOTH rules; the first (override) must win
+    spec0 = pol.resolve("layers_0/mixer/wq")
+    assert spec0 is not None and spec0.special_values == (7.0, -7.0)
+    # layers_1 only matches the dense rule
+    assert pol.resolve("layers_1/mixer/wq") is None
+    # unmatched paths fall through to the base weight spec
+    assert pol.resolve("some/other/weight") == base
+
+
+def test_rule_order_is_significant():
+    rules_a = (LayerRule.dense("layers_*"), LayerRule.override("layers_0/*", block_size=32))
+    rules_b = tuple(reversed(rules_a))
+    pol_a = QuantPolicy(weight=TensorSpec.weight(), rules=rules_a)
+    pol_b = QuantPolicy(weight=TensorSpec.weight(), rules=rules_b)
+    assert pol_a.resolve("layers_0/mlp/up") is None  # dense rule shadowed the override
+    spec_b = pol_b.resolve("layers_0/mlp/up")
+    assert spec_b is not None and spec_b.block_size == 32
+
+
+def test_with_rules_prepends_by_default():
+    pol = QuantPolicy.packed().with_rules(LayerRule.override("*embed*", block_size=32))
+    spec = pol.resolve("embed")
+    assert spec is not None and spec.block_size == 32  # beats the default dense rule
+
+
+def test_regex_rules():
+    pol = QuantPolicy(
+        weight=TensorSpec.weight(), rules=(LayerRule.dense("re:(^|/)D$"),)
+    )
+    assert pol.resolve("layers_0/mixer/D") is None
+    assert pol.resolve("layers_0/mixer/Down") is not None  # no substring false-positive
+
+
+def test_default_rules_precision_map():
+    pol = QuantPolicy.packed()
+    for dense_path in (
+        "embed",
+        "lm_head",
+        "layers_1/moe/router",
+        "final_norm",
+        "layers_0/ln1",
+        "layers_0/mixer/conv_w",
+        "layers_0/mixer/A_log",
+        "layers_0/mixer/dt_bias",
+        "layers_0/mixer/kv_b",  # absorbed MLA decode contracts it densely
+        "layers_1/moe/experts/gate",  # no stacked packed kernel yet
+        "layers_0/mixer/bq",  # stacked (L, N) biases must never pack
+        "layers_0/mlp/up_b",
+    ):
+        assert pol.resolve(dense_path) is None, dense_path
+    for packed_path in (
+        "layers_0/mixer/wq",
+        "layers_0/mlp/down",
+        "layers_0/mlp/bottleneck",  # regression: 'b'-prefix no longer skips
+    ):
+        assert pol.resolve(packed_path) is not None, packed_path
+
+
+# ---------------------------------------------------------------------------
+# pack_model_weights under the policy API
+# ---------------------------------------------------------------------------
+def _toy_cfg():
+    from repro.configs import get_config
+
+    # pack_model_weights only threads the ArchConfig through; any real one works
+    return get_config("llama3_2_3b").reduced()
+
+
+def _toy_params():
+    return {
+        "embed": _rand((64, 32), 10),
+        "layers_0": {
+            "mixer": {"wq": _rand((32, 32), 11), "bq": _rand((32,), 12)},
+            "mlp": {"bottleneck": _rand((32, 16), 13), "down": _rand((16, 32), 14)},
+        },
+        "final_norm": _rand((32,), 15),
+    }
+
+
+def test_pack_model_weights_packs_bottleneck():
+    """Regression: the old name-substring walk skipped any leaf starting with
+    'b', silently leaving a `bottleneck` projection dense."""
+    from repro.core.packing import PackedRazerWeight
+    from repro.serving.engine import pack_model_weights
+
+    packed = pack_model_weights(_toy_params(), _toy_cfg(), QuantPolicy.packed())
+    assert isinstance(packed["layers_0"]["mlp"]["bottleneck"], PackedRazerWeight)
+    assert isinstance(packed["layers_0"]["mlp"]["down"], PackedRazerWeight)
+    assert isinstance(packed["layers_0"]["mixer"]["wq"], PackedRazerWeight)
+    # high-precision set unchanged
+    assert not isinstance(packed["embed"], PackedRazerWeight)
+    assert not isinstance(packed["final_norm"], PackedRazerWeight)
+    assert not isinstance(packed["layers_0"]["mixer"]["bq"], PackedRazerWeight)  # 1-D bias
+
+
+def test_pack_model_weights_skips_stacked_biases():
+    """Scan-stacked biases are (L, N) arrays that pass the 2-D shape check
+    once L is a block multiple -- the bias dense rules must catch them."""
+    from repro.core.packing import PackedRazerWeight
+    from repro.serving.engine import pack_model_weights
+
+    params = {
+        "layers_0": {
+            "mixer": {"wq": _rand((64, 64), 40), "bq": _rand((32, 64), 41)},
+            "mlp": {"up": _rand((64, 64), 42), "up_b": _rand((32, 64), 43)},
+        }
+    }
+    packed = pack_model_weights(params, _toy_cfg(), QuantPolicy.packed())
+    assert isinstance(packed["layers_0"]["mixer"]["wq"], PackedRazerWeight)
+    assert isinstance(packed["layers_0"]["mlp"]["up"], PackedRazerWeight)
+    assert not isinstance(packed["layers_0"]["mixer"]["bq"], PackedRazerWeight)
+    assert not isinstance(packed["layers_0"]["mlp"]["up_b"], PackedRazerWeight)
+
+
+def test_pack_model_weights_legacy_config_equivalent():
+    from repro.core.packing import PackedRazerWeight
+    from repro.serving.engine import pack_model_weights
+
+    params = _toy_params()
+    a = pack_model_weights(params, _toy_cfg(), QuantConfig(mode="packed"))
+    b = pack_model_weights(params, _toy_cfg(), QuantPolicy.packed())
+    la = jax.tree_util.tree_leaves(a, is_leaf=lambda l: isinstance(l, PackedRazerWeight))
+    lb = jax.tree_util.tree_leaves(b, is_leaf=lambda l: isinstance(l, PackedRazerWeight))
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        if isinstance(x, PackedRazerWeight):
+            np.testing.assert_array_equal(np.asarray(x.codes), np.asarray(y.codes))
+
+
+def test_fakequant_model_weights_applies_per_layer_rules():
+    from repro.serving.engine import fakequant_model_weights
+
+    params = _toy_params()
+    pol = QuantPolicy.fakequant().with_rules(LayerRule.dense("*mlp*"))
+    out = fakequant_model_weights(params, _toy_cfg(), pol)
+    # mlp weights untouched, mixer weight quantized, embed untouched
+    np.testing.assert_array_equal(
+        np.asarray(out["layers_0"]["mlp"]["bottleneck"]),
+        np.asarray(params["layers_0"]["mlp"]["bottleneck"]),
+    )
+    assert not np.array_equal(
+        np.asarray(out["layers_0"]["mixer"]["wq"]), np.asarray(params["layers_0"]["mixer"]["wq"])
+    )
+    np.testing.assert_array_equal(np.asarray(out["embed"]), np.asarray(params["embed"]))
+
+
+def test_kv_spec_validation_rejects_unsupported_encodings():
+    """The KV wire decoder is fixed (E4M3 / +-5 / block 16); a deviating
+    policy kv spec must error loudly, not silently mis-encode."""
+    from repro.serving.kvcache import kv_quantize
+
+    x = _rand((2, 32), 30)
+    kv_quantize(x, TensorSpec.kv())  # the supported spec passes
+    for bad in (
+        TensorSpec.kv(special_values=(7.0, -7.0)),
+        TensorSpec.kv(scale_fmt="e3m3"),
+        TensorSpec.kv(block_size=32),
+    ):
+        with pytest.raises(ValueError, match="unsupported KV-cache spec"):
+            kv_quantize(x, bad)
+
+
+def test_model_walk_respects_format_min_block_size():
+    """mxfp4 quantizes with blocks >= 32: a dim divisible by 16 but not 32
+    must be skipped by the eligibility check, not crash mid-walk."""
+    from repro.serving.engine import fakequant_model_weights
+
+    params = {"w": _rand((48, 32), 31), "w2": _rand((64, 32), 32)}
+    out = fakequant_model_weights(params, _toy_cfg(), QuantPolicy.fakequant("mxfp4"))
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(params["w"]))  # skipped
+    assert not np.array_equal(np.asarray(out["w2"]), np.asarray(params["w2"]))  # quantized
+
+
+def test_tree_paths_vocabulary():
+    paths = dict(tree_paths(_toy_params()))
+    assert "layers_0/mixer/wq" in paths and "embed" in paths
+
+
+# ---------------------------------------------------------------------------
+# pluggable formats: a new format registered from OUTSIDE core flows through
+# qlinear, pack_model_weights and the Engine with no core edits
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class _StubPacked:
+    """Test-double wire container: stores the already-quantized weight."""
+
+    data: jnp.ndarray
+    shape: tuple
+
+    def tree_flatten(self):
+        return (self.data,), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux[0])
+
+
+class _StubQuantized:
+    def __init__(self, q):
+        self.q = q
+
+    def dequantize(self):
+        return self.q
+
+
+def _stub_quantize(x, *, block_size=16, axis=-1, **_):
+    # crude 1/8-step rounding: close enough to reality to drive generation
+    return _StubQuantized(jnp.round(x * 8.0) / 8.0)
+
+
+def _stub_pack(w, spec):
+    return _StubPacked(data=_stub_quantize(w).dequantize(), shape=tuple(w.shape))
+
+
+def _stub_matmul(x, pw):
+    return x @ pw.data.astype(x.dtype)
+
+
+@pytest.fixture
+def stub_format():
+    registry.register_format(
+        "stub8",
+        _stub_quantize,
+        pack_fn=_stub_pack,
+        matmul_kernel=_stub_matmul,
+        packed_type=_StubPacked,
+        overwrite=True,
+    )
+    yield "stub8"
+    registry.unregister_format("stub8")
+
+
+def test_registered_format_flows_through_qlinear(stub_format):
+    x = _rand((2, 32), 20)
+    w = _rand((32, 16), 21)
+    spec = TensorSpec(format="stub8", mode="fakequant", scale_fmt=None, special_values=None)
+    y = qlinear(x, w, QuantPolicy(weight=spec))
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ (jnp.round(w * 8) / 8)), atol=1e-6
+    )
+    # packed: container type drives kernel dispatch
+    lin = QuantizedLinear.create(w, QuantPolicy(weight=spec.with_(mode="packed")))
+    assert isinstance(lin.w, _StubPacked)
+    yp = qlinear(x, lin, QuantPolicy(weight=spec.with_(mode="packed")))
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(y), atol=1e-6)
+
+
+def test_registered_format_flows_through_engine(stub_format):
+    """Acceptance: a new format reaches end-to-end serving with zero edits to
+    core/qlinear.py or kernels/ops.py."""
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.serving.engine import Engine, ServeConfig, pack_model_weights
+
+    cfg = get_config("llama3_2_3b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    spec = TensorSpec(format="stub8", mode="packed", scale_fmt=None, special_values=None)
+    pol = QuantPolicy(weight=spec)
+
+    packed = pack_model_weights(params, cfg, pol)
+    stubs = [
+        l
+        for l in jax.tree_util.tree_leaves(packed, is_leaf=lambda x: isinstance(x, _StubPacked))
+        if isinstance(l, _StubPacked)
+    ]
+    assert stubs, "no weights packed into the stub container"
+
+    eng = Engine(params, cfg, ServeConfig(max_len=32, max_new_tokens=4, quant=pol))
+    # the engine's params must actually hold the stub containers
+    assert any(
+        isinstance(l, _StubPacked)
+        for l in jax.tree_util.tree_leaves(eng.params, is_leaf=lambda x: isinstance(x, _StubPacked))
+    )
+    out = eng.generate([[1, 2, 3, 4]])
+    assert len(out[0]) == 8 and all(0 <= t < cfg.vocab_size for t in out[0])
+    assert out == eng.generate([[1, 2, 3, 4]])  # deterministic
+
+
+def test_quantized_matmul_dispatch(stub_format):
+    from repro.kernels import ops
+
+    x = _rand((2, 32), 22)
+    w = _rand((32, 16), 23)
+    pw = _stub_pack(w, None)
+    np.testing.assert_allclose(
+        np.asarray(ops.quantized_matmul(x, pw)), np.asarray(_stub_matmul(x, pw)), atol=1e-6
+    )
+    with pytest.raises(TypeError):
+        ops.quantized_matmul(x, w)  # plain arrays are not packed containers
+
+
+def test_register_format_duplicate_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register_format("razer", lambda x, **k: x)
+
+
+def test_unknown_format_raises():
+    with pytest.raises(KeyError, match="unknown quantization format"):
+        TensorSpec(format="definitely_not_a_format").quantize(_rand((16,), 24))

@@ -83,6 +83,15 @@ def test_pack_model_weights_structure():
     assert not isinstance(packed["embed"], PackedRazerWeight)
 
 
+def test_engine_packed_moe_mla_arch():
+    """Packed serving of an MoE+MLA arch: per-layer rules keep the stacked
+    expert banks and the absorbed-decode `kv_b` dense while everything else
+    packs (the legacy name-substring skip list crashed here)."""
+    eng, _, _ = _engine("deepseek_v2_236b", quant=QuantConfig(mode="packed"))
+    out = eng.generate([[1, 2, 3, 4]], max_new_tokens=4)
+    assert len(out[0]) == 8
+
+
 @pytest.mark.parametrize("arch", ["mamba2_370m", "recurrentgemma_2b", "whisper_base", "deepseek_v2_236b"])
 def test_engine_exotic_archs(arch):
     eng, cfg, _ = _engine(arch)
