@@ -21,11 +21,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.packing import pack_weight
+from repro.core.packing import pack_stacked_weights, pack_weight
 from repro.kernels import ops, ref
 from repro.launch.costmodel import HBM_BW, PEAK_FLOPS
 
 from .common import time_fn, weight_like
+
+# (name, E_total, topk, d_model, moe_d_ff) for the MoE grouped-GEMM rows
+MOE_SHAPES = [
+    ("dbrx_132b", 16, 4, 6144, 10752),
+    ("deepseek_v2_236b", 160, 6, 5120, 1536),
+]
 
 # (layer, K, N) from the paper's microbenchmarks (Llama-3.1-8B / Qwen3-32B)
 PAPER_SHAPES = [
@@ -103,6 +109,59 @@ def appE_block_autotune() -> List:
         us = (time.perf_counter() - t0) * 1e6
         ok = bool(jnp.allclose(y, want, atol=1e-4, rtol=1e-4))
         rows.append((f"appE/bm{bm}_bn{bn}_bk{bk}", round(us, 1),
+                     f"vmem_kib={vmem // 1024} correct={ok}"))
+    return rows
+
+
+def grouped_moe_roofline() -> List:
+    """Expert-bank grouped GEMM roofline: HBM bytes for the whole stacked bank
+    vs a bf16 bank, at DBRX / DeepSeek-V2 decode shapes.  Decode MoE GEMMs are
+    the most memory-bound in the model (each expert sees only
+    topk/E of the tokens), so the 4.5-bit bank is where the packed wire
+    format pays off most -- the exact motivation for the grouped kernel."""
+    rows = []
+    for name, e, topk, d, f in MOE_SHAPES:
+        for batch in (1, 16, 128):
+            # per-step expert rows: batch tokens * topk slots spread over E
+            m = max(batch * topk // e, 1)
+            rb = sum(razer_gemm_bytes(m, k_, n_) for k_, n_ in ((d, f), (d, f), (f, d))) * e
+            bb = sum(bf16_gemm_bytes(m, k_, n_) for k_, n_ in ((d, f), (d, f), (f, d))) * e
+            t_mem = rb / HBM_BW
+            flops = 2 * m * e * (2 * d * f + f * d)
+            t_cmp = flops / PEAK_FLOPS
+            bound = "mem" if t_mem > t_cmp else "compute"
+            rows.append((
+                f"grouped_moe/{name}_B{batch}", round(max(t_mem, t_cmp) * 1e6, 3),
+                f"speedup_vs_bf16={bb / rb:.2f}x bound={bound}",
+            ))
+    return rows
+
+
+def grouped_kernel_correctness() -> List:
+    """Grouped-kernel block sweep (interpret mode): the stacked-bank analogue
+    of ``appE_block_autotune`` -- verifies the (E, M//bm, N//bn, K//bk) grid
+    against the dequant-einsum oracle and reports the VMEM working set."""
+    from repro.kernels.razer_grouped_matmul import razer_grouped_matmul_pallas
+
+    e, m, k, n = 4, 32, 256, 128
+    w = weight_like((e, k, n), seed=11)
+    x = weight_like((e, m, k), seed=12)
+    pst = pack_stacked_weights(w)
+    want = ref.razer_grouped_matmul_ref(x, pst)
+    rows = []
+    for bm, bn, bk in [(8, 128, 128), (16, 128, 256), (32, 128, 128), (32, 128, 256)]:
+        if m % bm or n % bn or k % bk:
+            continue
+        vmem = (bm * bk * 2 + bk * bn // 2 + bk * bn // 16 + bk * bn * 2 + bm * bn * 4)
+        t0 = time.perf_counter()
+        y = razer_grouped_matmul_pallas(
+            x, pst.codes, pst.scale_meta, m0=5.0, m1=8.0,
+            block_m=bm, block_n=bn, block_k=bk,
+            compute_dtype=jnp.float32, interpret=True,
+        ) * pst.tensor_scale[:, None, None]
+        us = (time.perf_counter() - t0) * 1e6
+        ok = bool(jnp.allclose(y, want, atol=1e-4, rtol=1e-4))
+        rows.append((f"grouped/e{e}_bm{bm}_bn{bn}_bk{bk}", round(us, 1),
                      f"vmem_kib={vmem // 1024} correct={ok}"))
     return rows
 

@@ -2,6 +2,12 @@
 a quantized KV cache (paper §4.3 deployment + App. C.1).
 
     PYTHONPATH=src python examples/serve_quantized.py [--arch qwen3_8b]
+    PYTHONPATH=src python examples/serve_quantized.py --arch dbrx_132b   # MoE
+
+MoE architectures (dbrx_132b, deepseek_v2_236b) serve with their stacked
+expert banks packed too: the default ``*experts*`` policy rule packs each
+(E, d_in, d_out) bank into a ``PackedStackedTensor`` and ``moe_forward``
+dispatches the grouped packed matmul kernel (see docs/kernels.md).
 """
 import argparse
 import time
@@ -10,9 +16,17 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.packing import PackedStackedTensor
 from repro.core.policy import QuantPolicy
 from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
+
+
+def _count_packed_expert_banks(params) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        params, is_leaf=lambda x: isinstance(x, PackedStackedTensor)
+    )
+    return sum(isinstance(l, PackedStackedTensor) for l in leaves)
 
 
 def main():
@@ -39,8 +53,13 @@ def main():
         out = eng.generate(requests)
         dt = time.perf_counter() - t0
         toks = sum(len(o) - len(r) for o, r in zip(out, requests))
+        extra = ""
+        if cfg.moe and "packed" in name:
+            n_banks = _count_packed_expert_banks(eng.params)
+            assert n_banks > 0, "MoE config served without packed expert banks"
+            extra = f" [{n_banks} packed expert banks]"
         print(f"{name:22s}: {toks} tokens in {dt:.2f}s "
-              f"({toks / dt:.1f} tok/s, batch of {len(requests)} ragged requests)")
+              f"({toks / dt:.1f} tok/s, batch of {len(requests)} ragged requests){extra}")
         print(f"  sample: {out[0][:14]}...")
 
 

@@ -16,9 +16,11 @@ from .formats import (
 from .nvfp4 import BlockQuantized, nvfp4_qdq, nvfp4_quantize
 from .packing import (
     PackedRazerWeight,
+    PackedStackedTensor,
     decode_offset_register,
     encode_offset_register,
     pack_fp4_codes,
+    pack_stacked_weights,
     pack_weight,
     unpack_fp4_codes,
 )

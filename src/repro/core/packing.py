@@ -36,7 +36,9 @@ __all__ = [
     "pack_scale_meta",
     "unpack_scale_meta",
     "PackedRazerWeight",
+    "PackedStackedTensor",
     "pack_weight",
+    "pack_stacked_weights",
 ]
 
 
@@ -211,6 +213,91 @@ class PackedRazerWeight:
         vals = fp4_decode(codes.reshape(n, k // 16, 16), sv[..., None])
         w = vals * (scale * self.tensor_scale)[..., None]
         return w.reshape(n, k).T  # (K, N)
+
+
+# ---------------------------------------------------------------------------
+# stacked expert banks (E, K, N): one wire container for the whole bank
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class PackedStackedTensor:
+    """A stacked bank of E independent RaZeR-packed (K, N) weights.
+
+    This is the MoE expert-bank container: the grouped matmul kernel consumes
+    the whole bank at once (``kernels.razer_grouped_matmul``), so the E dim
+    stays leading on every leaf instead of being E separate containers.
+
+    codes       : (E, K//2, N) uint8 -- two FP4 codes per byte along K
+    scale_meta  : (E, K//16, N) uint8 -- E3M3 scale + 2-bit SV metadata
+    tensor_scale: (E,) f32 -- one per-bank-entry tensor scale (each expert is
+                  quantized independently, so its absmax normalization is its
+                  own -- matching E separate ``pack_weight`` calls bit-exactly)
+    sv_magnitudes: static (m0, m1), shared across the bank
+    shape       : logical (E, K, N)
+    """
+
+    codes: jnp.ndarray
+    scale_meta: jnp.ndarray
+    tensor_scale: jnp.ndarray
+    sv_magnitudes: Tuple[float, float]
+    shape: Tuple[int, int, int]
+
+    def tree_flatten(self):
+        return (self.codes, self.scale_meta, self.tensor_scale), (self.sv_magnitudes, self.shape)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, sv_magnitudes=aux[0], shape=aux[1])
+
+    def __getitem__(self, e: int) -> PackedRazerWeight:
+        """One bank entry as a plain 2-D packed weight (ref-path convenience)."""
+        _, k, n = self.shape
+        return PackedRazerWeight(
+            codes=self.codes[e],
+            scale_meta=self.scale_meta[e],
+            tensor_scale=self.tensor_scale[e],
+            sv_magnitudes=self.sv_magnitudes,
+            shape=(k, n),
+        )
+
+    def dequantize(self):
+        """(E, K, N) f32 -- vmapped single-weight dequant over the bank."""
+        _, k, n = self.shape
+
+        def one(codes, sm, ts):
+            return PackedRazerWeight(codes, sm, ts, self.sv_magnitudes, (k, n)).dequantize()
+
+        return jax.vmap(one)(self.codes, self.scale_meta, self.tensor_scale)
+
+
+def pack_stacked_weights(
+    w,
+    *,
+    sv_magnitudes: Tuple[float, float] = (5.0, 8.0),
+    block_size: int = 16,
+) -> PackedStackedTensor:
+    """RaZeR-quantize a stacked (E, K, N) bank per-entry and bit-pack it.
+
+    Each entry is packed exactly as ``pack_weight`` would pack it in isolation
+    (independent tensor scales), so ``pack_stacked_weights(w)[e]`` round-trips
+    bit-for-bit with ``pack_weight(w[e])``.
+    """
+    if w.ndim != 3:
+        raise ValueError("pack_stacked_weights expects a 3-D (E, K, N) bank")
+    e, k, n = w.shape
+
+    def one(we):
+        pw = pack_weight(we, sv_magnitudes=sv_magnitudes, block_size=block_size)
+        return pw.codes, pw.scale_meta, pw.tensor_scale
+
+    codes, scale_meta, tensor_scale = jax.vmap(one)(jnp.asarray(w, jnp.float32))
+    return PackedStackedTensor(
+        codes=codes,
+        scale_meta=scale_meta,
+        tensor_scale=tensor_scale,
+        sv_magnitudes=tuple(float(m) for m in sv_magnitudes),
+        shape=(e, k, n),
+    )
 
 
 def pack_weight(

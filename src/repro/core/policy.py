@@ -59,6 +59,10 @@ class TensorSpec:
     scale_fmt: Optional[str] = "e3m3"
     special_values: Optional[Tuple[float, ...]] = WEIGHT_SPECIAL_VALUES
     ste: bool = False  # straight-through estimator (QAT, beyond-paper)
+    # The tensor is a stacked BANK of independent (K, N) matrices (leading E
+    # dim -- MoE expert weights): packed mode packs it into the format's
+    # stacked container (one grouped-kernel operand), not per-slice.
+    stacked: bool = False
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -155,6 +159,17 @@ class TensorSpec:
             )
         return entry.pack_fn(w, self)
 
+    def pack_stacked(self, w):
+        """Bit-pack a stacked (E, K, N) bank into the format's grouped wire
+        container (one operand for the grouped matmul kernel)."""
+        entry = self.entry
+        if entry.pack_stacked_fn is None:
+            raise ValueError(
+                f"format {self.format!r} has no pack_stacked_fn registered; "
+                f"stacked packed banks are unavailable (register one via register_format)"
+            )
+        return entry.pack_stacked_fn(w, self)
+
 
 @dataclass(frozen=True)
 class LayerRule:
@@ -212,11 +227,12 @@ class LayerRule:
 # ``bq``/``bk``/``bv``, ``*_b``) -- scan-stacked biases are (L, N) arrays that
 # would otherwise pass the 2-D eligibility check once L is a block multiple;
 # this also keeps ``q_b``/``kv_b`` dense (the absorbed MLA decode contracts
-# ``kv_b`` as a raw array).  Stacked (E, d, f) MoE expert banks stay dense in
-# *packed* mode until a stacked packed kernel lands (fakequant still
-# quantizes them in moe_forward).  Unlike the old name-substring skip list,
-# nothing here matches on a bare "b" prefix -- a ``bottleneck`` projection
-# quantizes like any weight.
+# ``kv_b`` as a raw array).  Stacked (E, d, f) MoE expert banks quantize like
+# any other weight but carry the ``stacked`` marker: packed mode packs the
+# whole bank into the format's stacked container, which ``moe_forward``
+# dispatches to the grouped matmul kernel.  Unlike the old name-substring
+# skip list, nothing here matches on a bare "b" prefix -- a ``bottleneck``
+# projection quantizes like any weight.
 DEFAULT_DENSE_RULES: Tuple[LayerRule, ...] = (
     LayerRule.dense("*embed*"),
     LayerRule.dense("*lm_head*"),
@@ -224,7 +240,7 @@ DEFAULT_DENSE_RULES: Tuple[LayerRule, ...] = (
     LayerRule.dense("*norm*"),
     LayerRule.dense("*ln*"),
     LayerRule.dense("*conv*"),
-    LayerRule.dense("*experts*"),
+    LayerRule.override("*experts*", stacked=True),
     LayerRule.dense("re:(^|/)a_param$"),
     LayerRule.dense("re:(^|/)A_log$"),
     LayerRule.dense("re:(^|/)D$"),

@@ -45,6 +45,7 @@ __all__ = [
     "get_format",
     "format_names",
     "packed_entry",
+    "grouped_entry",
     "spec_kwargs",
 ]
 
@@ -59,6 +60,11 @@ class FormatEntry:
     matmul_kernel: Optional[Callable] = None  # (x, packed) -> y
     act_kernel: Optional[Callable] = None  # (x, spec) -> fake-quantized x
     packed_type: Optional[type] = None  # container class for type dispatch
+    # stacked-bank (E, K, N) hooks: MoE expert banks pack into ONE grouped
+    # container consumed whole by a grouped kernel (moe_forward dispatch)
+    pack_stacked_fn: Optional[Callable] = None  # (w, spec) -> stacked container
+    grouped_matmul_kernel: Optional[Callable] = None  # (x (E,M,K), packed) -> y
+    packed_stacked_type: Optional[type] = None  # stacked container class
     min_block_size: int = 1  # e.g. 32 for OCP MXFP4
     takes_scale_fmt: bool = False
     takes_special_values: bool = False
@@ -66,6 +72,10 @@ class FormatEntry:
     @property
     def packable(self) -> bool:
         return self.pack_fn is not None
+
+    @property
+    def packable_stacked(self) -> bool:
+        return self.pack_stacked_fn is not None
 
 
 _REGISTRY: Dict[str, FormatEntry] = {}
@@ -93,6 +103,9 @@ def register_format(
     act_kernel: Optional[Callable] = None,
     *,
     packed_type: Optional[type] = None,
+    pack_stacked_fn: Optional[Callable] = None,
+    grouped_matmul_kernel: Optional[Callable] = None,
+    packed_stacked_type: Optional[type] = None,
     min_block_size: int = 1,
     overwrite: bool = False,
 ) -> FormatEntry:
@@ -109,6 +122,9 @@ def register_format(
         matmul_kernel=matmul_kernel,
         act_kernel=act_kernel,
         packed_type=packed_type,
+        pack_stacked_fn=pack_stacked_fn,
+        grouped_matmul_kernel=grouped_matmul_kernel,
+        packed_stacked_type=packed_stacked_type,
         min_block_size=min_block_size,
         takes_scale_fmt=takes_scale_fmt,
         takes_special_values=takes_special_values,
@@ -146,6 +162,17 @@ def packed_entry(obj) -> Optional[FormatEntry]:
     return None
 
 
+def grouped_entry(obj) -> Optional[FormatEntry]:
+    """The FormatEntry whose STACKED packed container type matches ``obj``.
+
+    The grouped analogue of ``packed_entry``: ``moe_forward`` uses it to route
+    a stacked expert bank to its format's grouped matmul kernel."""
+    for entry in _REGISTRY.values():
+        if entry.packed_stacked_type is not None and isinstance(obj, entry.packed_stacked_type):
+            return entry
+    return None
+
+
 def spec_kwargs(entry: FormatEntry, spec) -> dict:
     """The kwargs ``entry.quantize`` receives for a given TensorSpec.
 
@@ -175,6 +202,18 @@ def _razer_matmul(x, pw):
     return ops.razer_matmul(x, pw)
 
 
+def _razer_pack_stacked(w, spec):
+    from .packing import pack_stacked_weights
+
+    return pack_stacked_weights(w, sv_magnitudes=spec.sv_magnitudes, block_size=spec.block_size)
+
+
+def _razer_grouped_matmul(x, pst):
+    from repro.kernels import ops
+
+    return ops.razer_grouped_matmul(x, pst)
+
+
 def _razer_act_qdq(x, spec):
     from repro.kernels import ops
 
@@ -189,7 +228,7 @@ def _register_builtins() -> None:
         nf4_quantize,
     )
     from .nvfp4 import nvfp4_quantize
-    from .packing import PackedRazerWeight
+    from .packing import PackedRazerWeight, PackedStackedTensor
     from .razer import razer_quantize
 
     register_format("nvfp4", nvfp4_quantize, overwrite=True)
@@ -200,6 +239,9 @@ def _register_builtins() -> None:
         matmul_kernel=_razer_matmul,
         act_kernel=_razer_act_qdq,
         packed_type=PackedRazerWeight,
+        pack_stacked_fn=_razer_pack_stacked,
+        grouped_matmul_kernel=_razer_grouped_matmul,
+        packed_stacked_type=PackedStackedTensor,
         overwrite=True,
     )
     register_format("mxfp4", mxfp4_quantize, min_block_size=32, overwrite=True)

@@ -18,16 +18,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import registry
-from repro.core.packing import PackedRazerWeight
+from repro.core.packing import PackedRazerWeight, PackedStackedTensor
 
 from . import ref
+from .razer_grouped_matmul import razer_grouped_matmul_pallas
 from .razer_matmul import razer_matmul_pallas
 from .razer_quantize import razer_act_qdq_pallas
 
 __all__ = [
     "razer_matmul",
+    "razer_grouped_matmul",
     "razer_act_qdq",
     "quantized_matmul",
+    "quantized_grouped_matmul",
     "quantized_act_qdq",
     "on_tpu",
     "pick_blocks",
@@ -45,6 +48,18 @@ def quantized_matmul(x, pw):
             f"no registered matmul kernel for packed container {type(pw).__name__}"
         )
     return entry.matmul_kernel(x, pw)
+
+
+def quantized_grouped_matmul(x, pst):
+    """y[..., e, :, :] = x[..., e, :, K] @ dequant(pst[e]) for ANY registered
+    format's stacked packed container (the grouped analogue of
+    ``quantized_matmul`` -- what ``moe_forward`` uses for packed expert banks)."""
+    entry = registry.grouped_entry(pst)
+    if entry is None or entry.grouped_matmul_kernel is None:
+        raise TypeError(
+            f"no registered grouped matmul kernel for stacked container {type(pst).__name__}"
+        )
+    return entry.grouped_matmul_kernel(x, pst)
 
 
 def quantized_act_qdq(x, spec):
@@ -110,6 +125,41 @@ def razer_matmul(x, pw: PackedRazerWeight, *, force_pallas: bool = False, interp
     )
     y = y[:m] if pad else y
     return (y * pw.tensor_scale).reshape(*lead, n).astype(x.dtype)
+
+
+def razer_grouped_matmul(
+    x, pst: PackedStackedTensor, *, force_pallas: bool = False, interpret: bool | None = None
+):
+    """y[e] = x[e] @ dequant(pst[e]) for x (E, M, K) -> (E, M, N).
+
+    On TPU: the grouped Pallas kernel (one launch for the whole bank; block
+    sizes come from the ``pick_blocks`` divisor lattice, with M-padding as a
+    safety net should the lattice ever stop dividing M).  On CPU: the jnp
+    reference (dequant + einsum), which has the identical flops/bytes
+    structure for the dry-run roofline.
+    """
+    e, k, n = pst.shape
+    assert x.ndim == 3 and x.shape[0] == e and x.shape[-1] == k, (x.shape, pst.shape)
+    m = x.shape[1]
+    if not (force_pallas or on_tpu()):
+        # the reference dequantizes with per-expert tensor_scale already applied
+        return ref.razer_grouped_matmul_ref(x, pst).astype(x.dtype)
+    bm, bn, bk = pick_blocks(m, n, k)
+    pad = (-m) % bm
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    y = razer_grouped_matmul_pallas(
+        xp,
+        pst.codes,
+        pst.scale_meta,
+        m0=pst.sv_magnitudes[0],
+        m1=pst.sv_magnitudes[1],
+        block_m=bm,
+        block_n=bn,
+        block_k=bk,
+        interpret=bool(interpret) if interpret is not None else not on_tpu(),
+    )
+    y = y[:, :m] if pad else y
+    return (y * pst.tensor_scale[:, None, None]).astype(x.dtype)
 
 
 def razer_act_qdq(x, *, svs=(5.0, -5.0), block: int = 16, force_pallas: bool = False, interpret: bool | None = None):

@@ -61,19 +61,17 @@ def _decode_fp4_tile(codes, sv):
     return jnp.where(c == 8, sv, val)
 
 
-def _kernel(x_ref, codes_ref, sm_ref, o_ref, acc_ref, *, nsteps_k, block_k, m0, m1, compute_dtype):
-    @pl.when(pl.program_id(2) == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+def _decode_weight_tile(packed, sm, *, block_k, m0, m1, compute_dtype):
+    """One wire-format weight tile -> dense (bk, bn) values in compute_dtype.
 
-    # ---- decode the weight tile ------------------------------------------
-    packed = codes_ref[...]  # (bk//2, bn) uint8
+    packed: (bk//2, bn) uint8 code bytes; sm: (bk//16, bn) uint8 scale/meta
+    bytes.  Shared by the 2-D and the grouped kernels -- the wire format has
+    exactly one decoder."""
     lo = (packed & 0xF).astype(jnp.uint8)
     hi = (packed >> 4).astype(jnp.uint8)
     bk2, bn = packed.shape
     codes = jnp.stack([lo, hi], axis=1).reshape(bk2 * 2, bn)  # interleave along K
 
-    sm = sm_ref[...]  # (bk//16, bn) uint8
     scale = _decode_e3m3_scale(sm & 0x3F)
     meta = (sm >> 6).astype(jnp.int32)
     select = (meta >> 1) & 1
@@ -86,7 +84,17 @@ def _kernel(x_ref, codes_ref, sm_ref, o_ref, acc_ref, *, nsteps_k, block_k, m0, 
     sv_e = jnp.broadcast_to(sv[:, None, :], (nblk, 16, bn)).reshape(block_k, bn)
     scale_e = jnp.broadcast_to(scale[:, None, :], (nblk, 16, bn)).reshape(block_k, bn)
 
-    w = (_decode_fp4_tile(codes, sv_e) * scale_e).astype(compute_dtype)
+    return (_decode_fp4_tile(codes, sv_e) * scale_e).astype(compute_dtype)
+
+
+def _kernel(x_ref, codes_ref, sm_ref, o_ref, acc_ref, *, nsteps_k, block_k, m0, m1, compute_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _decode_weight_tile(
+        codes_ref[...], sm_ref[...], block_k=block_k, m0=m0, m1=m1, compute_dtype=compute_dtype
+    )
 
     # ---- MXU ---------------------------------------------------------------
     x = x_ref[...].astype(compute_dtype)

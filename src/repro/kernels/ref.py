@@ -3,16 +3,24 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.packing import PackedRazerWeight
+from repro.core.packing import PackedRazerWeight, PackedStackedTensor
 from repro.core.razer import razer_quantize
 
-__all__ = ["razer_matmul_ref", "razer_act_qdq_ref"]
+__all__ = ["razer_matmul_ref", "razer_grouped_matmul_ref", "razer_act_qdq_ref"]
 
 
 def razer_matmul_ref(x, pw: PackedRazerWeight, compute_dtype=jnp.float32):
     """y = x @ dequant(pw), f32 accumulation."""
     w = pw.dequantize().astype(compute_dtype)
     return jnp.dot(x.astype(compute_dtype), w, preferred_element_type=jnp.float32)
+
+
+def razer_grouped_matmul_ref(x, pst: PackedStackedTensor, compute_dtype=jnp.float32):
+    """y[e] = x[e] @ dequant(pst[e]) for every bank entry, f32 accumulation."""
+    w = pst.dequantize().astype(compute_dtype)  # (E, K, N)
+    return jnp.einsum(
+        "emk,ekn->emn", x.astype(compute_dtype), w, preferred_element_type=jnp.float32
+    )
 
 
 def razer_act_qdq_ref(x, svs=(5.0, -5.0), block: int = 16):

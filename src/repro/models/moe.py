@@ -1,12 +1,26 @@
 """Token-choice top-k MoE with grouped, capacity-bounded dispatch.
 
-Formulation (DESIGN.md §6): tokens are split into G dispatch groups (vmapped);
-within a group, slot positions come from a cumsum over an (slots, E) one-hot --
-never a (tokens, E, capacity) tensor.  The dispatch buffer is
-(G, E, capacity, d): with G sharded on the data axis and expert weights'
-E dim sharded on the data axis too, XLA SPMD lowers the expert einsum to the
-canonical expert-parallel all-to-all (GSPMD MoE pattern).  Capacity overflow
-drops slots (GShard semantics); an aux load-balance loss is returned.
+Formulation (see docs/architecture.md): tokens are split into G dispatch
+groups (vmapped); within a group, slot positions come from a cumsum over an
+(slots, E) one-hot -- never a (tokens, E, capacity) tensor.  The dispatch
+buffer is (G, E, capacity, d): with G sharded on the data axis and expert
+weights' E dim sharded on the data axis too, XLA SPMD lowers the dense /
+fakequant expert einsum to the canonical expert-parallel all-to-all (GSPMD
+MoE pattern).  The packed path below runs a Pallas grouped kernel, which
+XLA SPMD does not partition -- packed MoE serving is currently single-host
+(sharding the grouped kernel over E is an open roadmap item).  Capacity
+overflow drops slots (GShard semantics); an aux load-balance loss is
+returned.
+
+Expert weights run through one of three paths (docs/kernels.md):
+  * dense bf16 einsum (training / bf16 serving),
+  * fakequant: the stacked (E, d, f) banks are quantize-dequantized along
+    d at forward time (accuracy experiments),
+  * packed: ``pack_model_weights`` replaced the banks with stacked wire-format
+    containers (``PackedStackedTensor``) and the expert einsum dispatches --
+    by container type, through the format registry -- to the grouped packed
+    matmul kernel (``kernels/razer_grouped_matmul.py``), never materializing
+    a bf16 copy of the bank.
 
 DeepSeek-V2 style shared experts (always-on dense SwiGLU) are supported.
 """
@@ -18,6 +32,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import registry
 from repro.core.policy import as_policy
 from repro.core.qlinear import QuantLike, qlinear
 from repro.parallel.sharding import get_ctx, shard_activation
@@ -91,7 +106,8 @@ def _group_combine(h, slot_expert, slot_pos, keep, slot_token, topw, tg: int):
 def moe_forward(
     x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d) -> (y, aux_loss). Router kept f32 (DESIGN.md §4)."""
+    """x: (B, S, d) -> (y, aux_loss). Router kept f32 (paper convention:
+    routing logits are precision-critical; see the ``*router*`` dense rule)."""
     b, s, d = x.shape
     t = b * s
     e, k = cfg.n_experts, cfg.topk
@@ -121,16 +137,46 @@ def moe_forward(
     buf = shard_activation(buf, "moe_buf")  # (g, e, cap, d)
 
     we = p["experts"]
-    wspec = as_policy(quant).weight
-    if wspec.quantizes and wspec.mode == "fakequant":
-        # fakequant quantizes the stacked (E, d, f) expert banks along d; the
-        # packed deployment path keeps them dense (policy DEFAULT_DENSE_RULES)
-        # until a stacked packed kernel lands.
-        we = {k_: wspec.qdq(v, axis=1) for k_, v in we.items()}
-    hg = jnp.einsum("gecd,edf->gecf", buf, we["gate"].astype(buf.dtype))
-    hu = jnp.einsum("gecd,edf->gecf", buf, we["up"].astype(buf.dtype))
-    h = jax.nn.silu(hg) * hu
-    hout = jnp.einsum("gecf,efd->gecd", h, we["down"].astype(buf.dtype))
+    gentries = {r: registry.grouped_entry(we[r]) for r in ("gate", "up", "down")}
+    n_grouped = sum(v is not None for v in gentries.values())
+    if 0 < n_grouped < 3:
+        # pack_model_weights packs a bank all-or-none (both reduction dims
+        # must be block multiples); a mixed trio means hand-built params
+        raise ValueError(
+            "MoE expert bank mixes packed and dense weights: "
+            + ", ".join(f"{r}={'packed' if v is not None else 'dense'}"
+                        for r, v in gentries.items())
+        )
+    gentry = gentries["gate"]
+    if gentry is not None:
+        # packed deployment path: the banks are stacked wire-format containers
+        # (pack_model_weights under the default ``*experts*`` stacked rule);
+        # flatten (g, e, cap, d) -> per-expert (e, g*cap, d) rows and run the
+        # registered grouped packed matmul -- no bf16 bank is materialized.
+        grouped_mm = gentry.grouped_matmul_kernel
+        if grouped_mm is None:
+            raise TypeError(
+                f"format {gentry.name!r} packs stacked banks but registered no "
+                f"grouped_matmul_kernel; cannot run the packed expert einsum"
+            )
+        xe = buf.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+        hg = grouped_mm(xe, we["gate"])
+        hu = grouped_mm(xe, we["up"])
+        h = jax.nn.silu(hg) * hu
+        hout = grouped_mm(h, we["down"])  # (e, g*cap, d)
+        hout = hout.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+    else:
+        wspec = as_policy(quant).weight
+        if wspec.quantizes and wspec.mode == "fakequant":
+            # fakequant quantizes the stacked (E, d, f) banks along d at
+            # forward time, per expert (vmapped): each expert gets its own
+            # tensor scale, exactly matching what pack_stacked_weights encodes
+            # on the wire -- so fakequant and packed MoE forwards agree.
+            we = {k_: jax.vmap(lambda w_: wspec.qdq(w_, axis=0))(v) for k_, v in we.items()}
+        hg = jnp.einsum("gecd,edf->gecf", buf, we["gate"].astype(buf.dtype))
+        hu = jnp.einsum("gecd,edf->gecf", buf, we["up"].astype(buf.dtype))
+        h = jax.nn.silu(hg) * hu
+        hout = jnp.einsum("gecf,efd->gecd", h, we["down"].astype(buf.dtype))
     hout = shard_activation(hout, "moe_buf")
 
     yg = jax.vmap(_group_combine, in_axes=(0, 0, 0, 0, 0, 0, None))(hout, se, sp, keep, st, twg, tg)

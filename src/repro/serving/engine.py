@@ -70,11 +70,32 @@ def pack_model_weights(params, cfg: ArchConfig, quant: Union[QuantPolicy, QuantC
     guesses, so a ``bottleneck`` projection packs like any other weight.
     Scan-stacked weights (leading layer dim) are packed per layer and the
     containers restacked leaf-wise, which works for any registered format's
-    container.
+    container.  Specs carrying the ``stacked`` marker (MoE expert banks, the
+    default ``*experts*`` rule) pack the whole (E, d_in, d_out) bank into the
+    format's stacked container so ``moe_forward`` can run the grouped packed
+    kernel; a scan-stacked bank (L, E, d_in, d_out) packs one stacked
+    container per scan layer, restacked leaf-wise.
     """
 
     def pack_leaf(spec, leaf):
         if spec.mode != "packed":
+            return leaf
+        if spec.stacked:
+            # BOTH trailing dims must be block multiples: an MoE FFN trio has
+            # reduction dims {d_model, moe_d_ff} split across gate/up (E,d,f)
+            # and down (E,f,d), and moe_forward needs the whole trio packed
+            # or the whole trio dense -- the symmetric condition guarantees
+            # all three leaves decide identically (all-or-none per bank).
+            bs = spec.effective_block_size
+            if leaf.ndim == 3 and _packable(spec, leaf, 1) and leaf.shape[2] % bs == 0:
+                return spec.pack_stacked(leaf.astype(jnp.float32))
+            if leaf.ndim == 4 and _packable(spec, leaf, 2) and leaf.shape[3] % bs == 0:
+                # scan-stacked (L, E, d_in, d_out): one grouped container per
+                # scan layer, restacked leaf-wise (scan slices them back out)
+                packed = [
+                    spec.pack_stacked(leaf[i].astype(jnp.float32)) for i in range(leaf.shape[0])
+                ]
+                return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *packed)
             return leaf
         if leaf.ndim == 2 and _packable(spec, leaf, 0):
             return spec.pack(leaf.astype(jnp.float32))
@@ -95,6 +116,11 @@ def fakequant_model_weights(params, cfg: ArchConfig, quant: Union[QuantPolicy, Q
     enters a fakequant evaluation)."""
 
     def qdq_leaf(spec, leaf):
+        if spec.stacked:
+            # expert banks fake-quantize at forward time (moe_forward, along
+            # d_in) -- qdq'ing here too would double-round through two absmax
+            # normalizations and drift from the packed path's numerics
+            return leaf
         if leaf.ndim == 2 and _packable(spec, leaf, 0):
             return spec.qdq(leaf, axis=0)
         if leaf.ndim == 3 and _packable(spec, leaf, 1):

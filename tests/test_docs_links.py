@@ -1,0 +1,21 @@
+"""Docs cannot rot: every relative markdown link must resolve (the same
+check the CI docs job runs via tools/check_links.py)."""
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_relative_links_resolve():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_links.py")],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_docs_site_has_at_least_four_pages():
+    pages = list((REPO / "docs").glob("*.md"))
+    assert len(pages) >= 4, [p.name for p in pages]
+    assert (REPO / "README.md").exists()

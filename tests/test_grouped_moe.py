@@ -1,0 +1,284 @@
+"""Grouped packed matmul subsystem: kernel-vs-ref equivalence on stacked
+expert banks, pack_stacked_weights round-trips, and packed-vs-dense MoE
+forward parity under a packed policy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import registry
+from repro.core.packing import (
+    PackedStackedTensor,
+    pack_stacked_weights,
+    pack_weight,
+)
+from repro.core.policy import QuantPolicy
+from repro.kernels import ops, ref
+from repro.kernels.razer_grouped_matmul import razer_grouped_matmul_pallas
+from repro.models import moe as moe_mod
+from repro.models.config import ArchConfig
+from repro.serving.engine import pack_model_weights
+
+
+def _bank(e, k, n, scale=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.standard_normal((e, k, n)) * scale).astype(np.float32))
+
+
+def _x(e, m, k, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((e, m, k)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# pack_stacked_weights
+# ---------------------------------------------------------------------------
+def test_pack_stacked_matches_per_expert_pack_weight():
+    """Bit-for-bit: the stacked container is E independent pack_weight calls."""
+    w = _bank(3, 64, 32, seed=7)
+    pst = pack_stacked_weights(w)
+    assert pst.shape == (3, 64, 32)
+    assert pst.codes.shape == (3, 32, 32) and pst.scale_meta.shape == (3, 4, 32)
+    for e in range(3):
+        pw = pack_weight(w[e])
+        np.testing.assert_array_equal(np.asarray(pst.codes[e]), np.asarray(pw.codes))
+        np.testing.assert_array_equal(np.asarray(pst.scale_meta[e]), np.asarray(pw.scale_meta))
+        np.testing.assert_allclose(
+            float(pst.tensor_scale[e]), float(pw.tensor_scale), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(pst[e].dequantize()), np.asarray(pw.dequantize()), atol=0)
+
+
+def test_pack_stacked_roundtrip_matches_razer_quantize():
+    from repro.core.razer import razer_quantize
+
+    w = _bank(4, 128, 16, scale=3.0, seed=11)
+    deq = pack_stacked_weights(w).dequantize()
+    for e in range(4):
+        want = razer_quantize(w[e], axis=0, scale_fmt="e3m3").dequantize()
+        np.testing.assert_allclose(np.asarray(deq[e]), np.asarray(want), atol=1e-6)
+
+
+def test_pack_stacked_footprint_is_4p5_bits():
+    w = jnp.zeros((8, 256, 64))
+    pst = pack_stacked_weights(w)
+    bits = (pst.codes.size + pst.scale_meta.size) * 8 + 32 * pst.tensor_scale.size
+    assert bits / w.size == pytest.approx(4.5, abs=0.01)
+
+
+def test_pack_stacked_rejects_2d():
+    with pytest.raises(ValueError):
+        pack_stacked_weights(jnp.zeros((32, 16)))
+
+
+def test_packed_stacked_tensor_is_pytree():
+    pst = pack_stacked_weights(jnp.ones((2, 32, 16)))
+    leaves = jax.tree_util.tree_leaves(pst)
+    assert len(leaves) == 3
+    pst2 = jax.tree_util.tree_map(lambda x: x, pst)
+    assert isinstance(pst2, PackedStackedTensor) and pst2.shape == (2, 32, 16)
+
+
+# ---------------------------------------------------------------------------
+# grouped kernel vs ref
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "e,m,k,n,bm,bn,bk",
+    [
+        (2, 8, 64, 32, 8, 32, 32),
+        (4, 16, 128, 64, 8, 32, 64),
+        (3, 8, 512, 16, 8, 16, 256),  # deep-K accumulation across 2 grid steps
+        (1, 4, 64, 8, 4, 8, 16),      # degenerate single-expert bank
+    ],
+)
+def test_grouped_kernel_matches_ref_f32(e, m, k, n, bm, bn, bk):
+    x = _x(e, m, k, seed=e * m + k)
+    pst = pack_stacked_weights(_bank(e, k, n, seed=k * n % 1000))
+    y_k = razer_grouped_matmul_pallas(
+        x, pst.codes, pst.scale_meta,
+        m0=pst.sv_magnitudes[0], m1=pst.sv_magnitudes[1],
+        block_m=bm, block_n=bn, block_k=bk,
+        compute_dtype=jnp.float32, interpret=True,
+    ) * pst.tensor_scale[:, None, None]
+    y_r = ref.razer_grouped_matmul_ref(x, pst)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=2e-5, atol=2e-5)
+
+
+def test_grouped_kernel_matches_unstacked_kernel():
+    """Each bank entry must reproduce the 2-D kernel on the same weight."""
+    from repro.kernels.razer_matmul import razer_matmul_pallas
+
+    e, m, k, n = 3, 8, 64, 32
+    w = _bank(e, k, n, seed=5)
+    x = _x(e, m, k, seed=6)
+    pst = pack_stacked_weights(w)
+    y_g = razer_grouped_matmul_pallas(
+        x, pst.codes, pst.scale_meta, m0=5.0, m1=8.0,
+        block_m=8, block_n=32, block_k=32, compute_dtype=jnp.float32, interpret=True)
+    for i in range(e):
+        pw = pack_weight(w[i])
+        y_2d = razer_matmul_pallas(
+            x[i], pw.codes, pw.scale_meta, m0=5.0, m1=8.0,
+            block_m=8, block_n=32, block_k=32, compute_dtype=jnp.float32, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_g[i]), np.asarray(y_2d), rtol=1e-6, atol=1e-6)
+
+
+def test_grouped_kernel_sv_configs():
+    """Table 12 SV pairs must flow through the grouped decode path too."""
+    e, m, k, n = 2, 8, 64, 16
+    for sv_mags in [(5.0, 8.0), (5.0, 7.0), (2.5, 9.5)]:
+        w = np.asarray(_bank(e, k, n, seed=9)).copy()
+        w[:, ::5, :] = sv_mags[0] * 0.01
+        w[:, 1::7, :] = -sv_mags[1] * 0.01
+        pst = pack_stacked_weights(jnp.asarray(w), sv_magnitudes=sv_mags)
+        x = _x(e, m, k, seed=10)
+        y_k = razer_grouped_matmul_pallas(
+            x, pst.codes, pst.scale_meta, m0=sv_mags[0], m1=sv_mags[1],
+            block_m=8, block_n=16, block_k=32, compute_dtype=jnp.float32, interpret=True,
+        ) * pst.tensor_scale[:, None, None]
+        y_r = ref.razer_grouped_matmul_ref(x, pst)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_ops_wrapper_ragged_m():
+    x = _x(2, 5, 64, seed=13)  # ragged M=5 (bm degrades down the divisor lattice)
+    pst = pack_stacked_weights(_bank(2, 64, 32, seed=14))
+    y_ref = ref.razer_grouped_matmul_ref(x, pst)
+    y = ops.razer_grouped_matmul(x, pst, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=8e-2, atol=8e-2)
+    y_cpu = ops.razer_grouped_matmul(x, pst)  # reference path
+    np.testing.assert_allclose(np.asarray(y_cpu), np.asarray(y_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_registry_dispatch():
+    """quantized_grouped_matmul routes by stacked-container type."""
+    pst = pack_stacked_weights(_bank(2, 32, 16, seed=15))
+    entry = registry.grouped_entry(pst)
+    assert entry is not None and entry.name == "razer"
+    x = _x(2, 4, 32, seed=16)
+    y = ops.quantized_grouped_matmul(x, pst)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(ref.razer_grouped_matmul_ref(x, pst)), rtol=1e-5, atol=1e-5)
+    with pytest.raises(TypeError):
+        ops.quantized_grouped_matmul(x, jnp.zeros((2, 32, 16)))
+
+
+# ---------------------------------------------------------------------------
+# packed MoE forward
+# ---------------------------------------------------------------------------
+def _moe_cfg(**kw):
+    base = dict(
+        name="t", family="moe", num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+        d_ff=64, vocab_size=64, moe=True, n_experts=4, topk=2, moe_d_ff=32,
+        capacity_factor=8.0,
+    )
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def _packed_moe_params(cfg, seed=0):
+    p = moe_mod.moe_init(jax.random.PRNGKey(seed), cfg)
+    packed = pack_model_weights({"layers_0": {"moe": p}}, cfg, QuantPolicy.packed())
+    return p, packed["layers_0"]["moe"]
+
+
+def test_moe_forward_packed_matches_fakequant():
+    """Packed expert banks must reproduce the fakequant forward (the same
+    weight rounding, evaluated through the grouped wire-format path)."""
+    cfg = _moe_cfg()
+    p, p_packed = _packed_moe_params(cfg)
+    assert isinstance(p_packed["experts"]["gate"], PackedStackedTensor)
+    x = jnp.asarray(
+        np.random.default_rng(1).standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y_fake, aux_fake = moe_mod.moe_forward(x, p, cfg, quant=QuantPolicy.fakequant())
+    y_packed, aux_packed = moe_mod.moe_forward(x, p_packed, cfg, quant=QuantPolicy.packed())
+    assert y_packed.shape == x.shape
+    # router weights are identical; expert weights share the same rounding
+    np.testing.assert_allclose(float(aux_fake), float(aux_packed), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y_packed), np.asarray(y_fake), rtol=2e-4, atol=2e-4)
+
+
+def test_moe_forward_packed_close_to_dense():
+    """4.5-bit expert banks stay within the quantization error envelope."""
+    cfg = _moe_cfg()
+    p, p_packed = _packed_moe_params(cfg, seed=3)
+    x = jnp.asarray(
+        np.random.default_rng(4).standard_normal((1, 16, cfg.d_model)), jnp.float32)
+    y_dense, _ = moe_mod.moe_forward(x, p, cfg)
+    y_packed, _ = moe_mod.moe_forward(x, p_packed, cfg, quant=QuantPolicy.packed())
+    err = float(jnp.linalg.norm(y_packed - y_dense) / jnp.maximum(jnp.linalg.norm(y_dense), 1e-9))
+    assert err < 0.25, err
+
+
+def test_moe_forward_packed_with_shared_experts():
+    cfg = _moe_cfg(n_shared_experts=1)
+    p, p_packed = _packed_moe_params(cfg, seed=5)
+    # shared experts are plain 2-D swiglu weights: packed per-weight
+    from repro.core.packing import PackedRazerWeight
+
+    assert isinstance(p_packed["shared"]["gate"], PackedRazerWeight)
+    x = jnp.asarray(
+        np.random.default_rng(6).standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    y, aux = moe_mod.moe_forward(x, p_packed, cfg, quant=QuantPolicy.packed())
+    assert y.shape == x.shape and np.isfinite(float(aux))
+
+
+def test_pack_model_weights_scan_stacked_moe_bank():
+    """A scan-stacked (L, E, d, f) bank packs one grouped container per scan
+    layer, restacked leaf-wise (what full MoE models produce)."""
+    cfg = _moe_cfg()
+    p1 = moe_mod.moe_init(jax.random.PRNGKey(7), cfg)
+    p2 = moe_mod.moe_init(jax.random.PRNGKey(8), cfg)
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]), p1, p2)
+    packed = pack_model_weights({"layers_0": {"moe": stacked}}, cfg, QuantPolicy.packed())
+    bank = packed["layers_0"]["moe"]["experts"]["gate"]
+    assert isinstance(bank, PackedStackedTensor)
+    assert bank.codes.shape == (2, cfg.n_experts, cfg.d_model // 2, cfg.moe_d_ff)
+    # slicing out scan layer 0 leaf-wise reproduces packing p1's bank directly
+    layer0 = jax.tree_util.tree_map(lambda l: l[0], bank)
+    want = pack_stacked_weights(p1["experts"]["gate"])
+    np.testing.assert_array_equal(np.asarray(layer0.codes), np.asarray(want.codes))
+    np.testing.assert_array_equal(np.asarray(layer0.scale_meta), np.asarray(want.scale_meta))
+
+
+@pytest.mark.parametrize("d_model,moe_d_ff", [(32, 24), (24, 32)])
+def test_pack_is_all_or_none_when_one_dim_misaligned(d_model, moe_d_ff):
+    """If either FFN reduction dim (d_model or moe_d_ff) is not a block
+    multiple, the WHOLE gate/up/down trio stays dense -- a mixed bank would
+    crash the forward (gate/up block along d_model, down along moe_d_ff)."""
+    cfg = _moe_cfg(d_model=d_model, num_heads=2, moe_d_ff=moe_d_ff, d_ff=2 * d_model)
+    p, p_packed = _packed_moe_params(cfg)
+    for role in ("gate", "up", "down"):
+        assert not isinstance(p_packed["experts"][role], PackedStackedTensor), role
+    x = jnp.asarray(
+        np.random.default_rng(2).standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    y, _ = moe_mod.moe_forward(x, p_packed, cfg, quant=QuantPolicy.packed())
+    assert y.shape == x.shape
+
+
+def test_moe_forward_rejects_mixed_bank():
+    """Hand-built half-packed banks fail loudly, not with an AttributeError."""
+    cfg = _moe_cfg()
+    p = moe_mod.moe_init(jax.random.PRNGKey(11), cfg)
+    p["experts"]["gate"] = pack_stacked_weights(p["experts"]["gate"])
+    x = jnp.asarray(
+        np.random.default_rng(12).standard_normal((1, 8, cfg.d_model)), jnp.float32)
+    with pytest.raises(ValueError, match="mixes packed and dense"):
+        moe_mod.moe_forward(x, p, cfg, quant=QuantPolicy.packed())
+
+
+def test_moe_forward_packed_jit_and_scan_sliced():
+    """The packed forward works under jit (containers are pytrees)."""
+    cfg = _moe_cfg()
+    _, p_packed = _packed_moe_params(cfg, seed=9)
+    x = jnp.asarray(
+        np.random.default_rng(10).standard_normal((1, 8, cfg.d_model)), jnp.float32)
+
+    @jax.jit
+    def run(x, p):
+        y, aux = moe_mod.moe_forward(x, p, cfg, quant=QuantPolicy.packed())
+        return y, aux
+
+    y, _ = run(x, p_packed)
+    y2, _ = moe_mod.moe_forward(x, p_packed, cfg, quant=QuantPolicy.packed())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-5, atol=1e-5)

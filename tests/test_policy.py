@@ -166,7 +166,6 @@ def test_default_rules_precision_map():
         "layers_0/mixer/A_log",
         "layers_0/mixer/dt_bias",
         "layers_0/mixer/kv_b",  # absorbed MLA decode contracts it densely
-        "layers_1/moe/experts/gate",  # no stacked packed kernel yet
         "layers_0/mixer/bq",  # stacked (L, N) biases must never pack
         "layers_0/mlp/up_b",
     ):
@@ -177,6 +176,10 @@ def test_default_rules_precision_map():
         "layers_0/mlp/bottleneck",  # regression: 'b'-prefix no longer skips
     ):
         assert pol.resolve(packed_path) is not None, packed_path
+    # expert banks pack as STACKED grouped containers (grouped matmul kernel)
+    espec = pol.resolve("layers_1/moe/experts/gate")
+    assert espec is not None and espec.stacked and espec.mode == "packed"
+    assert not pol.resolve("layers_0/mixer/wq").stacked
 
 
 # ---------------------------------------------------------------------------

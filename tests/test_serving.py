@@ -84,10 +84,18 @@ def test_pack_model_weights_structure():
 
 
 def test_engine_packed_moe_mla_arch():
-    """Packed serving of an MoE+MLA arch: per-layer rules keep the stacked
-    expert banks and the absorbed-decode `kv_b` dense while everything else
-    packs (the legacy name-substring skip list crashed here)."""
+    """Packed serving of an MoE+MLA arch: per-layer rules keep the
+    absorbed-decode `kv_b` dense, pack the stacked expert banks into grouped
+    containers (no dense fallback), and pack everything else per-weight."""
     eng, _, _ = _engine("deepseek_v2_236b", quant=QuantConfig(mode="packed"))
+    from repro.core.packing import PackedStackedTensor
+
+    banks = [
+        l for l in jax.tree_util.tree_leaves(
+            eng.params, is_leaf=lambda x: isinstance(x, PackedStackedTensor))
+        if isinstance(l, PackedStackedTensor)
+    ]
+    assert len(banks) == 3  # gate/up/down of the scan-stacked MoE group
     out = eng.generate([[1, 2, 3, 4]], max_new_tokens=4)
     assert len(out[0]) == 8
 

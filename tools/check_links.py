@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""Check that every relative link in the repo's markdown docs resolves.
+
+    python tools/check_links.py [files...]
+
+With no arguments, checks README.md and docs/*.md (the CI docs job). For
+each ``[text](target)`` link: external schemes (http/https/mailto) are
+skipped, ``#anchor``-only links are skipped, and everything else must name
+an existing file or directory relative to the markdown file's location
+(query/anchor suffixes stripped). Exits non-zero listing every broken link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) -- excluding images is unnecessary: ![alt](img) matches the
+# same shape, and image targets must resolve too.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_links(md: Path):
+    text = md.read_text(encoding="utf-8")
+    # strip fenced code blocks: ``` ... ``` often contains bracketed
+    # pseudo-syntax that is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        yield m.group(1)
+
+
+def check_file(md: Path) -> list[str]:
+    broken = []
+    for target in iter_links(md):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0].split("?", 1)[0]
+        if not rel:
+            continue
+        resolved = (md.parent / rel).resolve()
+        if not resolved.exists():
+            broken.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    return broken
+
+
+def main(argv: list[str]) -> int:
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+    missing = [str(f) for f in files if not f.exists()]
+    if missing:
+        print("\n".join(f"no such file: {m}" for m in missing))
+        return 1
+    broken = [b for f in files for b in check_file(f)]
+    if broken:
+        print("\n".join(broken))
+        print(f"\n{len(broken)} broken link(s) in {len(files)} file(s)")
+        return 1
+    print(f"OK: all relative links resolve in {len(files)} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
