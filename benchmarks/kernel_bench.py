@@ -137,6 +137,42 @@ def grouped_moe_roofline() -> List:
     return rows
 
 
+def _bank_bytes_packed(e: int, d: int, f: int) -> float:
+    """HBM bytes of one packed gate/up/down expert-bank trio (4.5 bits/value
+    + one f32 tensor_scale per expert row per matrix)."""
+    per_matrix = d * f / 2 + d * f / 16 + 4
+    return 3 * e * per_matrix
+
+
+def sharded_grouped_moe() -> List:
+    """Expert-parallel packed MoE (docs/parallelism.md): per-device bank
+    bytes at E/ep rows per device vs the replicated packed bank (the
+    pre-shard_map state, where XLA could not partition the Pallas call), and
+    the all-to-all activation payload that buys the cut.  Decode regime
+    (per-device GEMMs are memory-bound, so per-device bytes == time)."""
+    rows = []
+    for name, e, topk, d, f in MOE_SHAPES:
+        bank = _bank_bytes_packed(e, d, f)
+        for ep in (1, 8, 16):
+            if e % ep:
+                continue
+            per_dev = bank / ep
+            # decode batch 16 per device: bf16 token slots each way, and only
+            # the (ep-1)/ep fraction bound for remote experts actually moves
+            batch = 16
+            a2a = 2 * (2 * batch * topk * d) * (ep - 1) / ep
+            # replicated packed banks: every device reads the WHOLE bank per
+            # step (grouped kernel over full E) and moves no token exchange
+            speedup = bank / (per_dev + a2a)
+            rows.append((
+                f"sharded_moe/{name}_ep{ep}", round(per_dev / HBM_BW * 1e6, 3),
+                f"per_dev_bank_mib={per_dev / 2**20:.1f} "
+                f"a2a_kib={a2a / 2**10:.1f} "
+                f"speedup_vs_replicated={speedup:.2f}x",
+            ))
+    return rows
+
+
 def grouped_kernel_correctness() -> List:
     """Grouped-kernel block sweep (interpret mode): the stacked-bank analogue
     of ``appE_block_autotune`` -- verifies the (E, M//bm, N//bn, K//bk) grid

@@ -234,6 +234,13 @@ class PackedStackedTensor:
                   own -- matching E separate ``pack_weight`` calls bit-exactly)
     sv_magnitudes: static (m0, m1), shared across the bank
     shape       : logical (E, K, N)
+
+    Every leaf keeps the expert dim leading, which is what makes the bank
+    expert-parallel-shardable: splitting on E slices between packed (K, N)
+    entries, never through one, so the wire format of each entry is byte-for-
+    byte identical whether the bank is whole or an E/ep shard on one device
+    (docs/parallelism.md).  ``local_shard`` rewrites the static metadata for
+    such a shard.
     """
 
     codes: jnp.ndarray
@@ -258,6 +265,32 @@ class PackedStackedTensor:
             tensor_scale=self.tensor_scale[e],
             sv_magnitudes=self.sv_magnitudes,
             shape=(k, n),
+        )
+
+    def local_shard(self, n_shards: int) -> "PackedStackedTensor":
+        """Static metadata for an E/n_shards expert-parallel shard of this bank.
+
+        At the shard_map boundary (models/moe.py) the body receives this
+        container with its array leaves already sliced to the local E/n_shards
+        expert rows, but ``shape`` is static aux data and still names the
+        global E -- this rewrites it to the local value.  The leaves themselves
+        are untouched: expert-parallel sharding splits the bank only on the
+        leading expert dim, never inside a packed (K, N) entry, so each local
+        row stays bit-identical to ``pack_weight(w[e])``.
+        """
+        e, k, n = self.shape
+        if n_shards <= 0 or e % n_shards:
+            raise ValueError(
+                f"cannot split a packed bank of E={e} expert rows into "
+                f"{n_shards} equal expert-parallel shards: E must be divisible "
+                f"by the ep axis size"
+            )
+        return PackedStackedTensor(
+            codes=self.codes,
+            scale_meta=self.scale_meta,
+            tensor_scale=self.tensor_scale,
+            sv_magnitudes=self.sv_magnitudes,
+            shape=(e // n_shards, k, n),
         )
 
     def dequantize(self):

@@ -15,6 +15,7 @@ A format is registered once with::
         matmul_kernel=my_matmul,    # (x, packed) -> y                (optional)
         act_kernel=my_act_qdq,      # (x, spec) -> fake-quantized x   (optional)
         packed_type=MyPacked,       # container class for dispatch    (optional)
+        shard_stacked_fn=my_plan,   # expert-parallel partition plan  (optional)
     )
 
 and then flows through ``qlinear``, ``pack_model_weights`` and the serving
@@ -65,6 +66,15 @@ class FormatEntry:
     pack_stacked_fn: Optional[Callable] = None  # (w, spec) -> stacked container
     grouped_matmul_kernel: Optional[Callable] = None  # (x (E,M,K), packed) -> y
     packed_stacked_type: Optional[type] = None  # stacked container class
+    # expert-parallel partition plan for the stacked container
+    # (docs/parallelism.md): called as fn(bank, axis_name) and returns
+    #   (specs, localize) where ``specs`` is a bank-structured pytree of
+    #   jax.sharding.PartitionSpec splitting every leaf on its expert dim,
+    #   and ``localize(bank, n_shards)`` rewrites the container's static
+    #   metadata for the E/n_shards shard a shard_map body receives.
+    # Formats that register this inherit expert-parallel MoE serving
+    # (parallel/sharding places the leaves, models/moe shard_maps the kernel).
+    shard_stacked_fn: Optional[Callable] = None  # (bank, axis) -> (specs, localize)
     min_block_size: int = 1  # e.g. 32 for OCP MXFP4
     takes_scale_fmt: bool = False
     takes_special_values: bool = False
@@ -106,6 +116,7 @@ def register_format(
     pack_stacked_fn: Optional[Callable] = None,
     grouped_matmul_kernel: Optional[Callable] = None,
     packed_stacked_type: Optional[type] = None,
+    shard_stacked_fn: Optional[Callable] = None,
     min_block_size: int = 1,
     overwrite: bool = False,
 ) -> FormatEntry:
@@ -125,6 +136,7 @@ def register_format(
         pack_stacked_fn=pack_stacked_fn,
         grouped_matmul_kernel=grouped_matmul_kernel,
         packed_stacked_type=packed_stacked_type,
+        shard_stacked_fn=shard_stacked_fn,
         min_block_size=min_block_size,
         takes_scale_fmt=takes_scale_fmt,
         takes_special_values=takes_special_values,
@@ -214,6 +226,36 @@ def _razer_grouped_matmul(x, pst):
     return ops.razer_grouped_matmul(x, pst)
 
 
+def _razer_shard_stacked(bank, axis):
+    """Expert-parallel partition plan for a ``PackedStackedTensor``.
+
+    Every leaf carries the expert dim first (after any scan-stacked layer
+    dims the engine restacked on top), so the plan is uniform: split that dim
+    over ``axis``, replicate everything else.  The packed (K, N) wire format
+    inside each expert row is never cut -- the invariant that lets a shard be
+    fed straight to the grouped kernel (docs/parallelism.md).
+    """
+    import jax
+    from jax.sharding import PartitionSpec
+
+    # codes are logically (E, K//2, N); extra leading dims are scan-stacked
+    # layer dims (pack_model_weights restacks per-scan-layer containers) and
+    # shift the expert dim right by the same amount on every leaf.
+    lead = bank.codes.ndim - 3
+
+    def spec(leaf):
+        axes = [None] * leaf.ndim
+        axes[lead] = axis
+        return PartitionSpec(*axes)
+
+    specs = jax.tree_util.tree_map(spec, bank)
+
+    def localize(local_bank, n_shards: int):
+        return local_bank.local_shard(n_shards)
+
+    return specs, localize
+
+
 def _razer_act_qdq(x, spec):
     from repro.kernels import ops
 
@@ -242,6 +284,7 @@ def _register_builtins() -> None:
         pack_stacked_fn=_razer_pack_stacked,
         grouped_matmul_kernel=_razer_grouped_matmul,
         packed_stacked_type=PackedStackedTensor,
+        shard_stacked_fn=_razer_shard_stacked,
         overwrite=True,
     )
     register_format("mxfp4", mxfp4_quantize, min_block_size=32, overwrite=True)

@@ -9,6 +9,11 @@ which dispatch through the core format registry by packed-container type /
 TensorSpec: a new format registered via ``core.registry.register_format`` flows
 through without edits here.  The razer-specific entry points below are that
 format's registered kernels.
+
+These wrappers are deliberately mesh-blind: under expert parallelism the
+shard_map boundary lives ABOVE them (``models/moe.py``), so the grouped
+wrapper simply receives the local E/ep bank shard and launches a local-E
+grid -- identical code to the single-device launch (docs/parallelism.md).
 """
 from __future__ import annotations
 
@@ -137,6 +142,12 @@ def razer_grouped_matmul(
     safety net should the lattice ever stop dividing M).  On CPU: the jnp
     reference (dequant + einsum), which has the identical flops/bytes
     structure for the dry-run roofline.
+
+    E is whatever bank the caller holds: the full bank on one device, or a
+    local E/ep shard inside the expert-parallel shard_map boundary
+    (``models/moe.py``) -- the grid is (local_E, M/bm, N/bn, K/bk) and the
+    wire format of each expert row is identical either way, so this wrapper
+    needs no sharding awareness (docs/parallelism.md).
     """
     e, k, n = pst.shape
     assert x.ndim == 3 and x.shape[0] == e and x.shape[-1] == k, (x.shape, pst.shape)

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_test_mesh"]
+__all__ = ["make_production_mesh", "make_serving_mesh", "make_test_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,6 +16,32 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_serving_mesh(*, ep: int | None = None, tp: int = 1):
+    """A (ep, tp) serving mesh over ("data", "model") axes.
+
+    The data axis doubles as the expert-parallel axis (docs/parallelism.md):
+    packed MoE expert banks split E/ep rows per device along it, and
+    ``moe_forward`` shard_maps the grouped kernel over it.  ``ep`` defaults
+    to ``n_devices // tp`` (use every local device).  For MoE serving pick an
+    ep that divides ``cfg.n_experts`` -- an indivisible bank falls back to
+    replication (``parallel.sharding.expert_shard_size`` has the exact rule).
+    """
+    n = len(jax.devices())
+    if tp <= 0:
+        raise ValueError(f"tp must be positive, got {tp}")
+    if ep is None:
+        ep = max(n // tp, 1)
+    if ep <= 0:
+        raise ValueError(f"ep must be positive, got {ep}")
+    if ep * tp > n:
+        raise ValueError(
+            f"serving mesh ({ep}, {tp}) needs {ep * tp} devices but only {n} "
+            f"are visible (set XLA_FLAGS=--xla_force_host_platform_device_count"
+            f"=N for host-CPU testing)"
+        )
+    return jax.make_mesh((ep, tp), ("data", "model"))
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):

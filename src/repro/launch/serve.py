@@ -2,6 +2,14 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_8b --reduced \
         --packed --kv-quant --requests 8
+
+Expert-parallel packed MoE serving (docs/parallelism.md): ``--ep N`` builds
+an (N, tp) mesh whose data axis shards the packed expert banks E/N rows per
+device; for MoE archs N must divide n_experts (checked up front).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch dbrx_132b --reduced \
+        --packed --ep 4
 """
 from __future__ import annotations
 
@@ -23,6 +31,9 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--packed", action="store_true", help="RaZeR 4.5-bit packed weights")
     ap.add_argument("--kv-quant", action="store_true", help="RaZeR KV cache (App. C.1)")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="expert-parallel (data) mesh axis size; 0 = no mesh")
+    ap.add_argument("--tp", type=int, default=1, help="tensor-parallel (model) axis size")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
@@ -46,13 +57,24 @@ def main(argv=None):
             full, step = restore_checkpoint(args.ckpt, {"params": params, "opt": None})
             params = full["params"]
 
+    mesh = None
+    if args.ep:
+        from repro.launch.mesh import make_serving_mesh
+        from repro.parallel.sharding import expert_shard_size
+
+        if cfg.moe and args.packed and args.ep > 1:
+            # fail fast with the divisibility rule instead of silently
+            # replicating a bank the user asked to shard
+            expert_shard_size(cfg.n_experts, args.ep)
+        mesh = make_serving_mesh(ep=args.ep, tp=args.tp)
+
     scfg = ServeConfig(
         max_len=args.max_len,
         max_new_tokens=args.max_new,
         kv_quant=args.kv_quant,
         quant=QuantPolicy.packed() if args.packed else QuantPolicy.bf16(),
     )
-    eng = Engine(params, cfg, scfg)
+    eng = Engine(params, cfg, scfg, mesh=mesh)
 
     rng = np.random.default_rng(0)
     reqs = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 16))).tolist()

@@ -6,9 +6,14 @@ groups (vmapped); within a group, slot positions come from a cumsum over an
 buffer is (G, E, capacity, d): with G sharded on the data axis and expert
 weights' E dim sharded on the data axis too, XLA SPMD lowers the dense /
 fakequant expert einsum to the canonical expert-parallel all-to-all (GSPMD
-MoE pattern).  The packed path below runs a Pallas grouped kernel, which
-XLA SPMD does not partition -- packed MoE serving is currently single-host
-(sharding the grouped kernel over E is an open roadmap item).  Capacity
+MoE pattern).  The packed path runs a Pallas grouped kernel, which XLA SPMD
+does not partition -- so on a multi-device mesh ``moe_forward`` draws the
+partition boundary itself: ``_expert_parallel_ffn`` wraps the grouped kernel
+in ``shard_map`` over the ep (data) axis, each device holding only its E/ep
+rows of the packed banks (placed by ``parallel/sharding.param_sharding_tree``
+via the registry's ``shard_stacked_fn`` plan) and launching the kernel on a
+local-E grid, with the same all-to-all dispatch/combine the dense path gets
+from GSPMD (``parallel/collectives.py``; see docs/parallelism.md).  Capacity
 overflow drops slots (GShard semantics); an aux load-balance loss is
 returned.
 
@@ -35,7 +40,7 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.core.policy import as_policy
 from repro.core.qlinear import QuantLike, qlinear
-from repro.parallel.sharding import get_ctx, shard_activation
+from repro.parallel.sharding import P, get_ctx, shard_activation
 
 from .config import ArchConfig
 from .layers import DEFAULT_QUANT, dense_init, swiglu, swiglu_init
@@ -103,6 +108,79 @@ def _group_combine(h, slot_expert, slot_pos, keep, slot_token, topw, tg: int):
     return out.at[slot_token].add(slots * w[:, None].astype(h.dtype))
 
 
+def _expert_parallel_ffn(buf, we, gentry, ctx, ep: int):
+    """Packed grouped FFN under shard_map over the ep (data) axis.
+
+    buf: (g, e, cap, d) dispatch buffer.  Each device holds only its E/ep
+    rows of the packed gate/up/down banks (the registry plan
+    ``shard_stacked_fn`` both places the leaves and localizes the container
+    metadata inside the body) and launches the grouped kernel on a local
+    (E/ep, M/bm, N/bn, K/bk) grid.  The wire format is untouched: a bank
+    shard is byte-identical to packing that E/ep sub-bank directly
+    (docs/parallelism.md).
+
+    Two token-movement strategies, both keeping the banks sharded:
+      * ``g % ep == 0`` (prefill / large batches): the group dim shards over
+        ep and tokens reach their experts with the same all-to-all
+        dispatch/combine the dense einsum gets from GSPMD.
+      * otherwise (decode: t, and so g, smaller than ep): the buffer is tiny
+        and replicated; each device slices out its own experts' slots,
+        computes them, and one activation all-gather rebuilds the buffer --
+        never a gather of the (much larger) packed bank.
+
+    Single-device meshes never reach this function -- ``moe_forward`` gates
+    on ep > 1 and otherwise runs the unsharded launch, so a (1, tp) mesh is
+    bit-exactly the pre-sharding path.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.parallel.collectives import (
+        combine_from_expert_shards,
+        dispatch_to_expert_shards,
+    )
+
+    axis = ctx.data_axis
+    g, e, cap, d = buf.shape
+    local_e = e // ep
+    grouped_mm = gentry.grouped_matmul_kernel
+    gateup_specs, localize = gentry.shard_stacked_fn(we["gate"], axis)
+    down_specs, _ = gentry.shard_stacked_fn(we["down"], axis)
+    all_to_all = g % ep == 0
+
+    def local_ffn(xe, gate_l, up_l, down_l):
+        hg = grouped_mm(xe, gate_l)
+        hu = grouped_mm(xe, up_l)
+        h = jax.nn.silu(hg) * hu
+        return grouped_mm(h, down_l)  # (e/ep, g*cap, d)
+
+    def ffn_a2a(buf_l, gate_l, up_l, down_l):
+        gate_l, up_l, down_l = (localize(b, ep) for b in (gate_l, up_l, down_l))
+        x = dispatch_to_expert_shards(buf_l, axis)  # (g, e/ep, cap, d)
+        xe = x.transpose(1, 0, 2, 3).reshape(local_e, g * cap, d)
+        ho = local_ffn(xe, gate_l, up_l, down_l)
+        ho = ho.reshape(local_e, g, cap, d).transpose(1, 0, 2, 3)
+        return combine_from_expert_shards(ho, axis)  # (g/ep, e, cap, d)
+
+    def ffn_replicated_tokens(buf_r, gate_l, up_l, down_l):
+        gate_l, up_l, down_l = (localize(b, ep) for b in (gate_l, up_l, down_l))
+        idx = jax.lax.axis_index(axis)
+        # this device's experts' slots out of the (replicated) full buffer;
+        # slice order matches shard_map's contiguous bank-leaf sharding
+        bl = jax.lax.dynamic_slice_in_dim(buf_r, idx * local_e, local_e, axis=1)
+        xe = bl.transpose(1, 0, 2, 3).reshape(local_e, g * cap, d)
+        ho = local_ffn(xe, gate_l, up_l, down_l).reshape(local_e, g, cap, d)
+        full = jax.lax.all_gather(ho, axis, axis=0, tiled=True)  # (e, g, cap, d)
+        return full.transpose(1, 0, 2, 3)
+
+    return shard_map(
+        ffn_a2a if all_to_all else ffn_replicated_tokens,
+        mesh=ctx.mesh,
+        in_specs=(P(axis) if all_to_all else P(), gateup_specs, gateup_specs, down_specs),
+        out_specs=P(axis) if all_to_all else P(),
+        check_rep=False,
+    )(buf, we["gate"], we["up"], we["down"])
+
+
 def moe_forward(
     x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -150,21 +228,34 @@ def moe_forward(
     gentry = gentries["gate"]
     if gentry is not None:
         # packed deployment path: the banks are stacked wire-format containers
-        # (pack_model_weights under the default ``*experts*`` stacked rule);
-        # flatten (g, e, cap, d) -> per-expert (e, g*cap, d) rows and run the
-        # registered grouped packed matmul -- no bf16 bank is materialized.
+        # (pack_model_weights under the default ``*experts*`` stacked rule).
         grouped_mm = gentry.grouped_matmul_kernel
         if grouped_mm is None:
             raise TypeError(
                 f"format {gentry.name!r} packs stacked banks but registered no "
                 f"grouped_matmul_kernel; cannot run the packed expert einsum"
             )
-        xe = buf.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
-        hg = grouped_mm(xe, we["gate"])
-        hu = grouped_mm(xe, we["up"])
-        h = jax.nn.silu(hg) * hu
-        hout = grouped_mm(h, we["down"])  # (e, g*cap, d)
-        hout = hout.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
+        ctx = get_ctx()
+        ep = (
+            ctx.axis_size(ctx.data_axis)
+            if ctx is not None and ctx.mesh is not None and ctx.data_axis
+            else 1
+        )
+        if ep > 1 and gentry.shard_stacked_fn is not None and e % ep == 0:
+            # expert-parallel: shard_map the grouped kernel over the ep axis,
+            # E/ep bank rows + a local-E grid per device (docs/parallelism.md)
+            hout = _expert_parallel_ffn(buf, we, gentry, ctx, ep)
+        else:
+            # unsharded launch (single device, ep=1 mesh, or E not divisible
+            # by ep -- then param placement replicated the bank): flatten
+            # (g, e, cap, d) -> per-expert (e, g*cap, d) rows and run the
+            # registered grouped packed matmul; no bf16 bank materialized.
+            xe = buf.transpose(1, 0, 2, 3).reshape(e, g * cap, d)
+            hg = grouped_mm(xe, we["gate"])
+            hu = grouped_mm(xe, we["up"])
+            h = jax.nn.silu(hg) * hu
+            hout = grouped_mm(h, we["down"])  # (e, g*cap, d)
+            hout = hout.reshape(e, g, cap, d).transpose(1, 0, 2, 3)
     else:
         wspec = as_policy(quant).weight
         if wspec.quantizes and wspec.mode == "fakequant":

@@ -1,12 +1,27 @@
-"""Quantized collectives (beyond-paper distributed-optimization trick,
-DESIGN.md §2): move FSDP/EP payloads over ICI in the RaZeR 4.5-bit wire
-format instead of bf16 — ~3.56x less link traffic for weight all-gathers,
-at RaZeR (not NVFP4) accuracy for the same bytes.
+"""Collectives for the explicitly-partitioned (shard_map) paths.
 
-Usable inside shard_map-ped compute or called collectively via pjit; the
-quantize/dequantize halves are the same bit-exact primitives the serving
-engine uses, so the wire format is identical to the storage format (a
-gathered shard can be fed straight into the packed kernel).
+Two families live here, both written against the mesh-axis vocabulary of
+docs/parallelism.md (``data`` = ep/FSDP axis, ``model`` = tp axis):
+
+  * **Expert-parallel dispatch/combine** -- ``dispatch_to_expert_shards`` /
+    ``combine_from_expert_shards`` are the tiled all-to-alls that move MoE
+    dispatch buffers between the token-sharded view ``(g_local, E, cap, d)``
+    and the expert-sharded view ``(g, E/ep, cap, d)``.  They are the same
+    GSPMD exchange XLA emits for the dense/fakequant expert einsum, written
+    explicitly because inside ``shard_map`` -- the boundary models/moe.py
+    draws around the grouped Pallas kernel, which XLA SPMD cannot partition
+    -- we are the partitioner.
+
+  * **Quantized payload collectives** (beyond-paper distributed-optimization
+    trick, DESIGN.md §2): move FSDP/EP payloads over ICI in the RaZeR 4.5-bit
+    wire format instead of bf16 -- ~3.56x less link traffic for weight
+    all-gathers, at RaZeR (not NVFP4) accuracy for the same bytes.  The
+    quantize/dequantize halves are the same bit-exact primitives the serving
+    engine uses, so the wire format is identical to the storage format (a
+    gathered shard can be fed straight into the packed kernel).
+
+All helpers are usable inside shard_map-ped compute or called collectively
+via pjit.
 """
 from __future__ import annotations
 
@@ -15,9 +30,45 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.sharding import expert_shard_size
 from repro.serving.kvcache import kv_dequantize, kv_quantize
 
-__all__ = ["wire_encode", "wire_decode", "quantized_all_gather"]
+__all__ = [
+    "wire_encode",
+    "wire_decode",
+    "quantized_all_gather",
+    "dispatch_to_expert_shards",
+    "combine_from_expert_shards",
+]
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel all-to-all (the shard_map MoE dispatch)
+# ---------------------------------------------------------------------------
+def dispatch_to_expert_shards(buf, axis_name: str):
+    """Token-sharded -> expert-sharded MoE dispatch (inside shard_map).
+
+    ``buf`` is one device's slice ``(g_local, E, cap, d)`` of the dispatch
+    buffer (groups sharded over ``axis_name``).  The tiled all-to-all splits
+    the expert dim into ep chunks and concatenates the group dim, returning
+    ``(g, E/ep, cap, d)``: every group's slots for THIS device's experts.
+    Raises the ``expert_shard_size`` error if E is not divisible by the axis
+    size -- a packed bank can only split in whole expert rows.
+    """
+    ep = jax.lax.psum(1, axis_name)
+    expert_shard_size(buf.shape[1], ep)
+    return jax.lax.all_to_all(buf, axis_name, split_axis=1, concat_axis=0, tiled=True)
+
+
+def combine_from_expert_shards(h, axis_name: str):
+    """Expert-sharded -> token-sharded MoE combine (inverse of dispatch).
+
+    ``h`` is ``(g, E/ep, cap, d)`` expert outputs on this device; the tiled
+    all-to-all splits the group dim and concatenates the expert dim back,
+    returning ``(g_local, E, cap, d)`` so the caller's weighted slot-combine
+    runs on the same token shard it dispatched from.
+    """
+    return jax.lax.all_to_all(h, axis_name, split_axis=0, concat_axis=1, tiled=True)
 
 
 def wire_encode(x) -> Tuple[jnp.ndarray, jnp.ndarray, Tuple[int, ...]]:

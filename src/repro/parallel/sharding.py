@@ -1,16 +1,29 @@
 """Divisibility-aware sharding: parameter rules + activation constraints.
 
-Design (DESIGN.md §5): model code is mesh-agnostic.  A thread-local sharding
-context (set by trainstep/servestep/dryrun) carries the mesh + axis roles;
-``shard_activation(x, kind)`` applies a constraint only when a context is
-active, and the parameter resolver assigns PartitionSpecs by tensor-name rules
-with per-dimension divisibility checks, falling back to replication instead of
-failing -- this is what lets every (arch x shape x mesh) cell compile.
+Design (DESIGN.md §5, docs/parallelism.md): model code is mesh-agnostic.  A
+thread-local sharding context (set by trainstep/servestep/dryrun) carries the
+mesh + axis roles; ``shard_activation(x, kind)`` applies a constraint only
+when a context is active, and the parameter resolver assigns PartitionSpecs
+by tensor-name rules with per-dimension divisibility checks, falling back to
+replication instead of failing -- this is what lets every
+(arch x shape x mesh) cell compile.
 
-Axis roles:
-  * "data"  -- batch / FSDP / expert-parallel axis (size 16 per pod)
-  * "model" -- tensor-parallel axis (size 16)
+Axis roles (the vocabulary docs/parallelism.md uses):
+  * "data"  -- batch / FSDP axis; doubles as the **ep** (expert-parallel)
+               axis: MoE expert banks -- dense (E, d_in, d_out) stacks AND
+               packed ``PackedStackedTensor`` wire containers -- split their
+               expert dim here (size 16 per production pod)
+  * "model" -- the **tp** (tensor-parallel) axis (size 16)
   * "pod"   -- inter-pod pure data parallelism (multi-pod mesh only)
+
+Dense/fakequant tensors are partitioned by XLA SPMD from these specs alone.
+Packed stacked banks need one extra step because XLA cannot see inside the
+grouped Pallas custom call: ``stacked_bank_specs`` asks the format registry
+for the bank's expert-parallel partition plan (``shard_stacked_fn``), this
+resolver places the leaves E/ep-per-device, and ``models/moe.py`` wraps the
+grouped kernel in ``shard_map`` over the same axis so each device launches
+on a local-E grid.  ``expert_shard_size`` is the single divisibility
+validator both layers share.
 """
 from __future__ import annotations
 
@@ -29,6 +42,8 @@ __all__ = [
     "param_spec",
     "param_sharding_tree",
     "input_sharding",
+    "expert_shard_size",
+    "stacked_bank_specs",
     "get_ctx",
     "P",
 ]
@@ -163,6 +178,55 @@ def param_spec(path: str, shape: Sequence[int], ctx: _Ctx, *, scan_stacked: bool
     return P()
 
 
+def expert_shard_size(e: int, ep: int) -> int:
+    """local_E = E // ep for an expert-parallel shard, or a clear error.
+
+    The single divisibility validator shared by parameter placement
+    (``stacked_bank_specs``), the all-to-all dispatch helpers
+    (``parallel/collectives.py``) and the packed container's ``local_shard``:
+    a packed bank can only split on the expert dim in whole expert rows.
+    """
+    if ep <= 0:
+        raise ValueError(f"expert-parallel axis size must be positive, got ep={ep}")
+    if e % ep:
+        raise ValueError(
+            f"cannot expert-parallel-shard E={e} experts over ep={ep} devices: "
+            f"E must be divisible by the ep (data) mesh axis size -- choose a "
+            f"mesh whose data axis divides n_experts, or leave the bank "
+            f"replicated (see docs/parallelism.md)"
+        )
+    return e // ep
+
+
+def stacked_bank_specs(bank, ctx_or_mesh, *, strict: bool = False):
+    """PartitionSpecs splitting a stacked packed bank over the ep axis.
+
+    Asks the bank's format registry entry for its expert-parallel partition
+    plan (``shard_stacked_fn``); returns the bank-structured pytree of
+    PartitionSpecs, or None when the bank cannot shard -- no registered plan,
+    no data (ep) axis on the mesh, or E not divisible by the axis size
+    (``strict=True`` raises the ``expert_shard_size`` error instead of
+    returning None for the divisibility case).
+    """
+    from repro.core import registry
+
+    entry = registry.grouped_entry(bank)
+    if entry is None or entry.shard_stacked_fn is None:
+        return None
+    ctx = ctx_or_mesh if isinstance(ctx_or_mesh, _Ctx) else _Ctx(ctx_or_mesh)
+    ax = ctx.data_axis
+    if ax is None:
+        return None
+    ep = ctx.axis_size(ax)
+    e = bank.shape[0]
+    if e % ep:
+        if strict:
+            expert_shard_size(e, ep)
+        return None
+    specs, _ = entry.shard_stacked_fn(bank, ax)
+    return specs
+
+
 def _tree_paths(tree, prefix=""):
     if isinstance(tree, dict):
         for k, v in tree.items():
@@ -173,7 +237,18 @@ def _tree_paths(tree, prefix=""):
 
 def param_sharding_tree(params, mesh: Mesh, scan_stacked_prefixes: Sequence[str] = ("layers",)):
     """Map a param pytree (nested dicts of arrays/ShapeDtypeStructs) to
-    NamedShardings."""
+    NamedShardings.
+
+    Stacked packed expert banks (registry ``packed_stacked_type`` containers)
+    are placed by their format's expert-parallel plan: every leaf splits its
+    expert dim over the ep (data) axis, so each device holds only E/ep rows
+    of codes/scale_meta/tensor_scale.  When the bank cannot shard (no ep
+    axis, or E not divisible) it replicates whole -- the grouped kernel
+    consumes whole bank leaves, so partial per-child sharding would only buy
+    a gather in front of the custom call.
+    """
+    from repro.core import registry
+
     ctx = _Ctx(mesh)
 
     def walk(tree, prefix=""):
@@ -181,6 +256,16 @@ def param_sharding_tree(params, mesh: Mesh, scan_stacked_prefixes: Sequence[str]
             return {k: walk(v, f"{prefix}/{k}" if prefix else str(k)) for k, v in tree.items()}
         stacked = any(prefix.split("/")[0].startswith(p) for p in scan_stacked_prefixes)
         if not jax.tree_util.all_leaves([tree]):
+            entry = registry.grouped_entry(tree)
+            if entry is not None and entry.shard_stacked_fn is not None:
+                especs = stacked_bank_specs(tree, ctx)
+                if especs is None:  # unshardable bank: replicate whole
+                    return jax.tree_util.tree_map(
+                        lambda _: NamedSharding(mesh, P()), tree
+                    )
+                return jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), especs
+                )
             # composite pytree node (e.g. PackedRazerWeight): shard each child
             # by its own shape under the same path rules
             return jax.tree_util.tree_map(

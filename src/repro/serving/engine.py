@@ -141,6 +141,14 @@ class Engine:
         self.kv_quant = bool(serve_cfg.kv_quant or self.policy.kv is not None)
         if self.policy.mode == "packed":
             params = pack_model_weights(params, cfg, serve_cfg.quant)
+        if mesh is not None:
+            # place params by the resolver rules (docs/parallelism.md): dense
+            # weights FSDP/TP-shard, packed stacked expert banks split E/ep
+            # over the data axis (each device holds only its expert rows --
+            # moe_forward then shard_maps the grouped kernel over that axis)
+            from repro.parallel.sharding import param_sharding_tree
+
+            params = jax.device_put(params, param_sharding_tree(params, mesh))
         self.params = params
         self._decode_jit = jax.jit(self._decode_step)
 

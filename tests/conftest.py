@@ -1,0 +1,21 @@
+"""Shared fixtures.
+
+Multi-device sharding tests need several host CPU devices, which XLA only
+provides when the flag is set BEFORE jax initializes:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -x -q
+
+The CI matrix runs the tier-1 suite both ways (1 and 8 host devices); with
+fewer than 8 devices the expert-parallel tests skip rather than fail.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture
+def ep_mesh():
+    """An 8-way expert-parallel ("data", "model") = (8, 1) host-CPU mesh."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return jax.make_mesh((8, 1), ("data", "model"))

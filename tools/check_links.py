@@ -1,16 +1,22 @@
 #!/usr/bin/env python3
-"""Check that every relative link in the repo's markdown docs resolves.
+"""Check that every relative link in the repo's markdown docs resolves,
+including ``#anchor`` fragments against the target file's headings.
 
     python tools/check_links.py [files...]
 
 With no arguments, checks README.md and docs/*.md (the CI docs job). For
 each ``[text](target)`` link: external schemes (http/https/mailto) are
-skipped, ``#anchor``-only links are skipped, and everything else must name
-an existing file or directory relative to the markdown file's location
-(query/anchor suffixes stripped). Exits non-zero listing every broken link.
+skipped, and everything else must name an existing file or directory
+relative to the markdown file's location (query suffixes stripped). When
+the target is a markdown file (or ``#anchor`` alone, meaning the current
+file) and carries an anchor, the anchor must match a heading slug in that
+file, using GitHub's slugification (lowercase, punctuation stripped,
+spaces to hyphens, ``-N`` suffixes for duplicates). Exits non-zero listing
+every broken link.
 """
 from __future__ import annotations
 
+import functools
 import re
 import sys
 from pathlib import Path
@@ -20,15 +26,39 @@ REPO = Path(__file__).resolve().parent.parent
 # [text](target) -- excluding images is unnecessary: ![alt](img) matches the
 # same shape, and image targets must resolve too.
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def _strip_code(text: str) -> str:
+    # fenced code blocks often contain bracketed pseudo-syntax and # lines
+    # that are neither links nor headings
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style heading -> anchor slug (sans duplicate suffixing)."""
+    s = re.sub(r"`", "", heading).strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+@functools.lru_cache(maxsize=None)
+def heading_anchors(md: Path) -> set[str]:
+    """Every anchor GitHub generates for ``md``'s headings (duplicates get
+    ``-1``, ``-2``, ... suffixes in document order)."""
+    anchors: set[str] = set()
+    counts: dict[str, int] = {}
+    for m in HEADING_RE.finditer(_strip_code(md.read_text(encoding="utf-8"))):
+        slug = _slugify(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
 
 
 def iter_links(md: Path):
-    text = md.read_text(encoding="utf-8")
-    # strip fenced code blocks: ``` ... ``` often contains bracketed
-    # pseudo-syntax that is not a link
-    text = re.sub(r"```.*?```", "", text, flags=re.S)
-    for m in LINK_RE.finditer(text):
+    for m in LINK_RE.finditer(_strip_code(md.read_text(encoding="utf-8"))):
         yield m.group(1)
 
 
@@ -37,12 +67,18 @@ def check_file(md: Path) -> list[str]:
     for target in iter_links(md):
         if target.startswith(SKIP_PREFIXES):
             continue
-        rel = target.split("#", 1)[0].split("?", 1)[0]
-        if not rel:
-            continue
-        resolved = (md.parent / rel).resolve()
+        rel, anchor = (target.split("#", 1) + [""])[:2]
+        rel = rel.split("?", 1)[0]
+        resolved = (md.parent / rel).resolve() if rel else md
         if not resolved.exists():
             broken.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+            continue
+        if anchor and resolved.suffix == ".md":
+            if anchor not in heading_anchors(resolved):
+                broken.append(
+                    f"{md.relative_to(REPO)}: broken anchor -> {target} "
+                    f"(no heading slug {anchor!r} in {resolved.name})"
+                )
     return broken
 
 
@@ -60,7 +96,7 @@ def main(argv: list[str]) -> int:
         print("\n".join(broken))
         print(f"\n{len(broken)} broken link(s) in {len(files)} file(s)")
         return 1
-    print(f"OK: all relative links resolve in {len(files)} file(s)")
+    print(f"OK: all relative links and anchors resolve in {len(files)} file(s)")
     return 0
 
 
