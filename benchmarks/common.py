@@ -19,6 +19,12 @@ import numpy as np
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 
+# CI smoke mode (benchmarks/run.py --dry): 1 timing iteration, no warmup, and
+# benches that consult it shrink their workloads -- the point is exercising
+# every bench code path cheaply so bench code cannot rot, not producing
+# publishable numbers.
+DRY = False
+
 
 def weight_like(shape, seed=0, df=5.0):
     rng = np.random.default_rng(seed)
@@ -42,6 +48,8 @@ def rel_mse(x, xhat):
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median wall-time (us) of a jitted callable."""
+    if DRY:
+        iters, warmup = 1, 0
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []

@@ -14,10 +14,16 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="run only benchmarks whose name contains this")
     ap.add_argument("--fast", action="store_true", help="skip the slow trained-LM benches")
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke: skip slow benches, 1 timing iter, shrunken "
+                         "workloads -- exercises every bench so the code can't rot")
     args = ap.parse_args(argv)
 
-    from . import kernel_bench, kv_quant, roofline, tables
+    from . import common, kernel_bench, kv_quant, roofline, serving_bench, tables
     from .common import emit
+
+    if args.dry:
+        common.DRY = True
 
     benches = [
         ("table1", tables.table1_scale_formats_weights),
@@ -38,6 +44,7 @@ def main(argv=None) -> None:
         ("grouped_kernel", kernel_bench.grouped_kernel_correctness),
         ("fig7_two_pass", kernel_bench.fig7_two_pass_model),
         ("appC1_kv", kv_quant.appC1_kv_quant),
+        ("serving_throughput", serving_bench.serving_throughput),
         ("roofline", roofline.roofline_rows),
     ]
     slow = {"table3_ppl", "table4_accuracy", "table6", "appC1_kv"}
@@ -45,7 +52,7 @@ def main(argv=None) -> None:
     for name, fn in benches:
         if args.only and args.only not in name:
             continue
-        if args.fast and name in slow:
+        if (args.fast or args.dry) and name in slow:
             continue
         print(f"# === {name} ===")
         try:

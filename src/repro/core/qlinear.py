@@ -118,7 +118,15 @@ def qdq_weight(w, cfg: QuantLike):
 
 
 def qdq_activation(x, cfg: QuantLike):
-    """Dynamically fake-quantize activations along the feature dim (axis -1)."""
+    """Dynamically fake-quantize activations along the feature dim (axis -1).
+
+    Routes through the format's registered ``act_kernel`` (the fused Pallas
+    dynamic-quant kernel on TPU, its jnp oracle on CPU) via
+    ``kernels.ops.quantized_act_qdq``; formats without an act kernel fall back
+    to the spec's qdq numerics.  Registered act kernels use the dynamic
+    per-block scale with NO tensor scale (the deployable form -- a per-tensor
+    absmax would need a second pass over the activation), matching the fused
+    kernel and the KV-cache wire format."""
     pol = as_policy(cfg)
     spec = pol.act
     if spec is None:
@@ -126,7 +134,10 @@ def qdq_activation(x, cfg: QuantLike):
             "qdq_activation called but the policy has no activation spec "
             "(act_format=None means weight-only quantization)"
         )
-    xq = spec.qdq(x, axis=-1)
+    # lazy: repro.kernels imports repro.core, so core reaches ops at call time
+    from repro.kernels.ops import quantized_act_qdq
+
+    xq = quantized_act_qdq(x, spec)
     if spec.ste:
         xq = x + jax.lax.stop_gradient(xq - x)
     return xq
@@ -180,6 +191,11 @@ def qlinear(x, lin, cfg: QuantLike):
     if entry is not None:
         if entry.matmul_kernel is None:
             raise TypeError(f"format {entry.name!r} has a packed container but no matmul_kernel")
+        pol = as_policy(cfg)
+        if pol.act is not None:
+            # W+A packed serving: dynamic activation quant ahead of the wire-
+            # format matmul, through the format's registered fused act kernel
+            x = qdq_activation(x, pol)
         y = entry.matmul_kernel(x, w)
     else:
         pol = as_policy(cfg)

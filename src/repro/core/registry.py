@@ -257,6 +257,11 @@ def _razer_shard_stacked(bank, axis):
 
 
 def _razer_act_qdq(x, spec):
+    if spec.scale_fmt not in (None, "e4m3"):
+        # the fused act kernel hardcodes the §4.1 activation E4M3 block scale;
+        # honor a non-default spec with the generic numerics rather than
+        # silently overriding its scale format
+        return spec.qdq(x, axis=-1)
     from repro.kernels import ops
 
     return ops.razer_act_qdq(x, svs=spec.special_values, block=spec.block_size)

@@ -34,6 +34,8 @@ __all__ = [
     "razer_matmul",
     "razer_grouped_matmul",
     "razer_act_qdq",
+    "razer_kv_attention",
+    "razer_paged_kv_attention",
     "quantized_matmul",
     "quantized_grouped_matmul",
     "quantized_act_qdq",
@@ -209,6 +211,31 @@ def razer_kv_attention(q, cache, cur_len, *, force_pallas: bool = False, interpr
         out = razer_kv_attention_pallas(
             qf, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"],
             jnp.asarray(cur_len, jnp.int32),
+            interpret=bool(interpret) if interpret is not None else not on_tpu())
+    out = out.astype(q.dtype)
+    return out[:, None] if squeeze else out
+
+
+def razer_paged_kv_attention(q, cache, page_table, cur_len, *,
+                             force_pallas: bool = False, interpret: bool | None = None):
+    """Decode attention over a PAGED packed KV pool (serving.pagepool layout:
+    pool arrays (P, ps, KVH, x), page_table (B, NP), cur_len (B,)).
+
+    q: (B, 1, H, hd) or (B, H, hd) -> same rank out.  The continuous-batching
+    analogue of ``razer_kv_attention``: the page-table lookup happens in the
+    kernel's index maps (TPU) or as a plain gather (CPU oracle)."""
+    from .paged_kv_attention import paged_kv_attention_pallas
+
+    squeeze = q.ndim == 4
+    qf = q[:, 0] if squeeze else q
+    if not (force_pallas or on_tpu()):
+        out = ref.paged_kv_attention_ref(
+            qf, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"],
+            page_table, cur_len)
+    else:
+        out = paged_kv_attention_pallas(
+            qf, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"],
+            jnp.asarray(page_table, jnp.int32), jnp.asarray(cur_len, jnp.int32),
             interpret=bool(interpret) if interpret is not None else not on_tpu())
     out = out.astype(q.dtype)
     return out[:, None] if squeeze else out

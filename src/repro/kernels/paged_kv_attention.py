@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: single-query (decode) attention over a PAGED
+RaZeR-packed KV pool -- the continuous-batching analogue of
+``razer_kv_attention.py``.
+
+The pool stores KV in fixed-size pages of ``page_size`` tokens
+(``serving/pagepool.py``); a per-sequence page table maps logical page index
+``pi`` to the physical page holding positions ``[pi*ps, (pi+1)*ps)``:
+
+    out[b, h, :] = softmax(q[b, h, :] . K_hat[pages(b), :, kvh(h), :]) @ V_hat
+
+The page table rides the scalar-prefetch channel, so the INDEX MAPS gather:
+grid step (b, kvh, pi) DMAs physical page ``page_table[b, pi]`` from HBM into
+VMEM, where the tile dequant (same arithmetic decode as the contiguous
+kernel -- the page layout is byte-identical wire format) overlaps the MXU
+scores matmul.  Masking with ``cur_len`` runs on LOGICAL positions, so null
+(padding) pages contribute exp(-inf) = 0 and physical page order is free.
+
+Grid: (B, KVH, pages_per_seq) -- the page dim is innermost/sequential so the
+online-softmax (m, l, acc) scratch stays resident, exactly like the S-chunk
+loop of the contiguous kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .razer_kv_attention import _dequant_tile
+
+__all__ = ["paged_kv_attention_pallas"]
+
+
+def _kernel(pt_ref, cur_len_ref, q_ref, kc_ref, km_ref, vc_ref, vm_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, ps, hd, npages):
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur_len = cur_len_ref[pl.program_id(0)]  # per-slot valid length
+    q = q_ref[...].astype(jnp.float32)  # (G, hd)
+    k = _dequant_tile(kc_ref[...], km_ref[...], hd)  # (ps, hd) f32
+    v = _dequant_tile(vc_ref[...], vm_ref[...], hd)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, ps)
+    # mask on LOGICAL positions: page pi holds [pi*ps, (pi+1)*ps)
+    pos = pi * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    s = jnp.where(pos < cur_len, s, -1e30)
+
+    m_prev = m_ref[...]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_kv_attention_pallas(q, k_codes, k_meta, v_codes, v_meta, page_table,
+                              cur_len, *, interpret: bool = False):
+    """q: (B, H, hd); pool: (P, ps, KVH, hd//2|hd//16) u8;
+    page_table: (B, NP) i32 physical page per logical page (0 = null page);
+    cur_len: (B,) i32 valid positions per sequence.
+
+    Returns (B, H, hd) f32.  H % KVH == 0."""
+    b, h, hd = q.shape
+    p_pages, ps, kvh, half = k_codes.shape
+    npages = page_table.shape[1]
+    assert half * 2 == hd and h % kvh == 0 and page_table.shape[0] == b
+    g = h // kvh
+    grid = (b, kvh, npages)
+
+    qg = q.reshape(b, kvh, g, hd)
+    # (P, ps, KVH, x) -> (P, KVH, ps, x): one physical page per grid step is a
+    # contiguous (ps, x) block for its kv head
+    kc = k_codes.transpose(0, 2, 1, 3)
+    km = k_meta.transpose(0, 2, 1, 3)
+    vc = v_codes.transpose(0, 2, 1, 3)
+    vm = v_meta.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, ps=ps, hd=hd, npages=npages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # page_table, cur_len
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, None, g, hd), lambda bi, ki, pi, pt, cl: (bi, ki, 0, 0)),
+                # the gather: logical page pi of sequence bi lives at physical
+                # page pt[bi, pi] -- the index map IS the page-table lookup
+                pl.BlockSpec((None, None, ps, hd // 2),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 16),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 2),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 16),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, None, g, hd), lambda bi, ki, pi, pt, cl: (bi, ki, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(
+        jnp.asarray(page_table, jnp.int32),
+        jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,)),
+        qg, kc, km, vc, vm,
+    )
+    return out.reshape(b, h, hd)

@@ -6,7 +6,13 @@ import jax.numpy as jnp
 from repro.core.packing import PackedRazerWeight, PackedStackedTensor
 from repro.core.razer import razer_quantize
 
-__all__ = ["razer_matmul_ref", "razer_grouped_matmul_ref", "razer_act_qdq_ref"]
+__all__ = [
+    "razer_matmul_ref",
+    "razer_grouped_matmul_ref",
+    "razer_act_qdq_ref",
+    "razer_kv_attention_ref",
+    "paged_kv_attention_ref",
+]
 
 
 def razer_matmul_ref(x, pw: PackedRazerWeight, compute_dtype=jnp.float32):
@@ -46,3 +52,24 @@ def razer_kv_attention_ref(q, k_codes, k_meta, v_codes, v_meta, cur_len):
     v = kv_dequantize(v_codes, v_meta, hd)
     out = decode_attention(q[:, None].reshape(b, 1, h, hd).astype(jnp.float32), k, v, cur_len)
     return out[:, 0]
+
+
+def paged_kv_attention_ref(q, k_codes, k_meta, v_codes, v_meta, page_table, cur_len):
+    """Oracle for the paged kernel: gather each sequence's pages into a
+    contiguous cache view, dequantize, run single-query attention.
+
+    Pool layout (P, ps, KVH, x); page_table (B, NP) i32; cur_len (B,).
+    Positions past cur_len (null-page tails included) mask to exp(-inf) = 0,
+    so the gathered view is numerically identical to the contiguous cache.
+    """
+    b, h, hd = q.shape
+    _, ps, kvh, _ = k_codes.shape
+    npages = page_table.shape[1]
+
+    def view(pool):  # (P, ps, kvh, x) -> (B, NP*ps, kvh, x)
+        g = pool[page_table]  # (B, NP, ps, kvh, x)
+        return g.reshape(b, npages * ps, kvh, pool.shape[-1])
+
+    return razer_kv_attention_ref(
+        q, view(k_codes), view(k_meta), view(v_codes), view(v_meta), cur_len
+    )

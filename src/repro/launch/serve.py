@@ -10,6 +10,15 @@ device; for MoE archs N must divide n_experts (checked up front).
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch dbrx_132b --reduced \
         --packed --ep 4
+
+Continuous batching (docs/serving.md): ``--continuous`` switches from one
+static batch to the scheduler-driven request-stream mode over the paged
+RaZeR-quantized KV pool -- requests arrive on a Poisson trace (``--rate``
+req/s) and are admitted into ``--slots`` decode slots as capacity frees up,
+with per-request TTFT / latency and pool stats printed at the end:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
+        --continuous --requests 12 --rate 20 --slots 4
 """
 from __future__ import annotations
 
@@ -37,6 +46,13 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged quantized KV pool")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson request arrival rate, req/s (0 = all at t=0)")
+    ap.add_argument("--slots", type=int, default=4, help="decode slots (continuous mode)")
+    ap.add_argument("--prefill-budget", type=int, default=256,
+                    help="max prompt tokens prefilled per engine step (continuous mode)")
     ap.add_argument("--ckpt", default=None, help="restore params from a training checkpoint dir")
     args = ap.parse_args(argv)
 
@@ -87,6 +103,28 @@ def main(argv=None):
 
         extras["enc_frames"] = jnp.asarray(
             rng.standard_normal((len(reqs), cfg.enc_frames, cfg.d_model)), jnp.bfloat16)
+
+    if args.continuous:
+        from repro.serving.scheduler import Request, SchedulerConfig
+
+        # Poisson arrival trace: exponential inter-arrival gaps at --rate req/s
+        gaps = rng.exponential(1.0 / args.rate, size=len(reqs)) if args.rate > 0 else \
+            np.zeros(len(reqs))
+        arrivals = np.cumsum(gaps)
+        stream = [Request(rid=i, prompt=p, max_new_tokens=args.max_new,
+                          arrival=float(arrivals[i]))
+                  for i, p in enumerate(reqs)]
+        rep = eng.serve(stream, sched_cfg=SchedulerConfig(
+            max_slots=args.slots, prefill_token_budget=args.prefill_budget))
+        print(f"{rep.new_tokens} tokens / {rep.wall_time:.2f}s = "
+              f"{rep.tokens_per_s:.1f} tok/s over {rep.decode_steps} decode steps "
+              f"(slots={args.slots}, packed={args.packed})")
+        print(f"  mean TTFT {rep.mean_ttft * 1e3:.1f} ms | mean latency "
+              f"{rep.mean_latency * 1e3:.1f} ms | peak {rep.peak_slots} slots, "
+              f"{rep.peak_pages} pages ({rep.peak_pages * rep.page_bytes / 1024:.1f} KiB KV)")
+        for r in rep.requests[:3]:
+            print(f"  prompt[{len(r.prompt)}] @t={r.arrival:.2f}s -> {r.out_tokens}")
+        return
 
     t0 = time.perf_counter()
     out = eng.generate(reqs, extras=extras)

@@ -270,14 +270,39 @@ def gqa_forward(x, p, cfg: ArchConfig, *, quant: QuantLike = DEFAULT_QUANT,
 
 
 def gqa_decode(x, p, cfg: ArchConfig, cache, cur_len, *, quant: QuantLike = DEFAULT_QUANT,
-               window: int = 0, positions3=None):
-    """One-token decode. cache = dict(k, v) [bf16] or the RaZeR-packed layout
-    from serving.kvcache (paper App. C.1).  cur_len: scalar or (B,) vector
-    (continuous batching).  Returns (y, cache)."""
+               window: int = 0, positions3=None, pages=None):
+    """One-token decode. cache = dict(k, v) [bf16], the RaZeR-packed layout
+    from serving.kvcache (paper App. C.1), or -- when ``pages`` is given -- a
+    paged pool slice from serving.pagepool.  cur_len: scalar or (B,) vector
+    (continuous batching); ``pages`` is the (B, NP) page table mapping logical
+    pages to physical pool pages.  Returns (y, cache)."""
     b = x.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1, 1), (b, 1))
     q, k, v = _qkv(x, p, cfg, quant, positions,
                    None if positions3 is None else positions3)
+    if pages is not None:
+        from repro.kernels import ops as kops
+        from repro.serving.kvcache import kv_quantize
+
+        if window != 0:
+            raise ValueError("paged KV decode does not support sliding windows")
+        # quantize the new token and scatter it into its page slot; idle
+        # slots (cur_len 0, all-null page row) land on the null page
+        kc, km = kv_quantize(k[:, 0])
+        vc, vm = kv_quantize(v[:, 0])
+        ps = cache["k_codes"].shape[1]
+        cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
+        pid = pages[jnp.arange(b), cl // ps]
+        slot = cl % ps
+        cache = {
+            "k_codes": cache["k_codes"].at[pid, slot].set(kc),
+            "k_meta": cache["k_meta"].at[pid, slot].set(km),
+            "v_codes": cache["v_codes"].at[pid, slot].set(vc),
+            "v_meta": cache["v_meta"].at[pid, slot].set(vm),
+        }
+        out = kops.razer_paged_kv_attention(q, cache, pages, cl + 1)
+        y = qlinear(out.reshape(b, 1, -1), p["wo"], quant)
+        return y, cache
     if "k_codes" in cache:
         from repro.kernels import ops as kops
         from repro.serving.kvcache import quantized_kv_append, quantized_kv_write

@@ -183,18 +183,25 @@ def _cache_init(cfg: ArchConfig, ltype: str, batch: int, max_len: int, dtype):
     raise ValueError(ltype)
 
 
-def _layer_decode(x, lp, cache, cur_len, cfg: ArchConfig, ltype: str, quant, enc=None, positions3=None):
+def _layer_decode(x, lp, cache, cur_len, cfg: ArchConfig, ltype: str, quant, enc=None,
+                  positions3=None, pages=None):
     h = rms_norm(x, lp["ln1"], cfg.norm_eps)
     if ltype in ("a", "m", "c"):
         if cfg.mla:
+            if pages is not None:
+                raise ValueError("paged KV decode supports GQA attention only (not MLA)")
             mix, cache = attn.mla_decode(h, lp["mixer"], cfg, cache, cur_len, quant=quant)
         else:
             win = cfg.window if (ltype == "a" and cfg.block_pattern) else 0
             mix, cache = attn.gqa_decode(h, lp["mixer"], cfg, cache, cur_len, quant=quant,
-                                         window=win, positions3=positions3)
+                                         window=win, positions3=positions3, pages=pages)
     elif ltype == "s":
+        if pages is not None:
+            raise ValueError("paged KV decode supports GQA attention only (not SSM state)")
         mix, cache = ssm_mod.mamba2_decode(h, lp["mixer"], cfg, cache, quant=quant)
     elif ltype == "r":
+        if pages is not None:
+            raise ValueError("paged KV decode supports GQA attention only (not RG-LRU state)")
         mix, cache = ssm_mod.rglru_decode(h, lp["mixer"], cfg, cache, quant=quant)
     x = x + mix
     if ltype == "c" and enc is not None:
@@ -469,8 +476,13 @@ def _rglru_prefill(h, mp, cfg, quant):
 
 
 def decode_step(params, token, caches, cur_len, cfg: ArchConfig,
-                quant: QuantLike = DEFAULT_QUANT, *, enc=None, positions3=None):
-    """token: (B,) int32 -> (logits (B, V), new caches)."""
+                quant: QuantLike = DEFAULT_QUANT, *, enc=None, positions3=None, pages=None):
+    """token: (B,) int32 -> (logits (B, V), new caches).
+
+    ``pages`` (B, NP) switches the attention layers to the paged KV pool: the
+    per-group caches are then pool slices (serving.pagepool layout) and the
+    page table is shared by every layer (pages are allocated per sequence
+    position range, not per layer)."""
     b = token.shape[0]
     x = embed(token[:, None], params["embed"], cfg.cdtype)
     if cfg.encoder_decoder:
@@ -486,7 +498,7 @@ def decode_step(params, token, caches, cur_len, cfg: ArchConfig,
             x, = carry
             lp, cache = lp_cache
             x, cache = _layer_decode(x, lp, cache, cur_len, cfg, _lt, quant, enc=enc,
-                                     positions3=positions3)
+                                     positions3=positions3, pages=pages)
             return (x,), cache
 
         (x,), cache_stack = _scan(body, (x,), (params[f"layers_{gi}"], caches[gi]))

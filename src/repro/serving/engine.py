@@ -1,10 +1,20 @@
-"""Batched serving engine: prefill + greedy decode with continuous-batching
-lite (per-sequence lengths), optional RaZeR-packed weights (the paper's
-weight-only deployment path) and RaZeR-quantized KV cache (App. C.1).
+"""Batched serving engine: prefill + greedy decode, optional RaZeR-packed
+weights (the paper's weight-only deployment path) and RaZeR-quantized KV
+cache (App. C.1).
+
+Two serving modes:
+
+  * ``Engine.generate`` -- static batching: one ragged batch runs to
+    completion over fixed ``(batch, max_len)`` caches (continuous-batching
+    lite: per-sequence lengths, right-padded).
+  * ``Engine.serve``    -- continuous batching: a ``serving.scheduler``
+    admission/decode loop over the paged RaZeR KV pool
+    (``serving.pagepool``), decoding a dynamic batch of slots each iteration
+    and refilling slots the moment a request finishes.
 
 The engine is the deployment-side counterpart of the training driver: it takes
 a param tree, optionally packs every linear weight into the 4.5-bit wire
-format (offline, once), and serves batches of token prompts.
+format (offline, once), and serves token prompts.
 """
 from __future__ import annotations
 
@@ -151,6 +161,12 @@ class Engine:
             params = jax.device_put(params, param_sharding_tree(params, mesh))
         self.params = params
         self._decode_jit = jax.jit(self._decode_step)
+        # the pool buffers are donated: serve() immediately replaces
+        # pool.caches with the step's output, and without donation every
+        # decode step would materialize a second full copy of the pool
+        # (doubling peak KV HBM -- exactly what the pool exists to avoid)
+        self._paged_decode_jit = jax.jit(self._paged_decode_step, donate_argnums=(2,))
+        self._prefill_jit = None  # built lazily by serve() (bucketed retrace)
 
     # -- internals ----------------------------------------------------------
     def _decode_step(self, params, token, caches, cur_len, enc):
@@ -185,6 +201,28 @@ class Engine:
                 out.append(c)
         return out
 
+    def _check_prompts(self, prompts: Sequence[Sequence[int]], n_new: int) -> None:
+        """Fail fast on requests the fixed caches cannot hold -- silent
+        truncation or an opaque shape error downstream would be worse.
+
+        Pure-SSM archs carry recurrent state, not a (max_len,) cache, so only
+        the empty-prompt check applies to them."""
+        if not prompts:
+            raise ValueError("Engine.generate needs at least one prompt")
+        for i, p in enumerate(prompts):
+            if len(p) == 0:
+                raise ValueError(
+                    f"prompt {i} is empty; every prompt needs >= 1 token "
+                    f"(prefill gathers logits at position len-1)"
+                )
+            if not self.cfg.ssm and len(p) + n_new > self.scfg.max_len:
+                raise ValueError(
+                    f"prompt {i} ({len(p)} tokens) + max_new_tokens ({n_new}) "
+                    f"exceeds ServeConfig.max_len ({self.scfg.max_len}); raise "
+                    f"max_len to >= {len(p) + n_new}, shorten the prompt, or "
+                    f"request fewer new tokens"
+                )
+
     # -- public API ---------------------------------------------------------
     def generate(self, prompts: Sequence[Sequence[int]], extras: Optional[Dict] = None,
                  max_new_tokens: Optional[int] = None) -> List[List[int]]:
@@ -192,6 +230,7 @@ class Engine:
         ragged prompt lengths are right-padded and tracked per sequence)."""
         extras = extras or {}
         n_new = max_new_tokens or self.scfg.max_new_tokens
+        self._check_prompts(prompts, n_new)
         b = len(prompts)
         lens = np.array([len(p) for p in prompts], np.int32)
         if self.cfg.ssm or self.cfg.block_pattern:
@@ -221,3 +260,174 @@ class Engine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             cur = cur + 1
         return out
+
+    # -- continuous batching (paged KV pool + scheduler) ---------------------
+    def _paged_decode_step(self, params, token, caches, pages, cur_len):
+        with sharding_ctx(self.mesh):
+            return tf.decode_step(params, token, caches, cur_len, self.cfg, self.quant,
+                                  pages=pages)
+
+    def _serve_prefill(self, prompt: Sequence[int]):
+        """Prefill ONE request, padded to a power-of-two bucket so the jitted
+        prefill compiles once per bucket, not once per prompt length.  Causal
+        masking makes the padded positions inert (exp(-inf) contributions are
+        exactly 0), so bucket size never changes the valid tokens' values."""
+        s = len(prompt)
+        bucket = max(8, 1 << (s - 1).bit_length())
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :s] = prompt
+        if self._prefill_jit is None:
+            def _prefill(params, tokens, lens):
+                with sharding_ctx(self.mesh):
+                    last, caches, _ = tf.prefill(
+                        params, tokens, self.cfg, self.quant,
+                        max_len=tokens.shape[1], last_positions=lens)
+                return last, caches
+
+            self._prefill_jit = jax.jit(_prefill)
+        return self._prefill_jit(self.params, jnp.asarray(toks),
+                                 jnp.asarray([s], jnp.int32))
+
+    def serve(self, requests, *, sched_cfg=None, pool_cfg=None,
+              max_new_tokens: Optional[int] = None):
+        """Continuous batching: serve a stream of requests over the paged
+        RaZeR-quantized KV pool, decoding a dynamic batch each iteration.
+
+        ``requests`` is a sequence of ``scheduler.Request`` or raw token-id
+        prompts (converted with arrival 0 and the engine's ``max_new_tokens``
+        / ``eos_id``).  Requests are admitted when their ``arrival`` offset
+        (seconds, relative to the call) has elapsed, a decode slot and pool
+        pages are free, and the prefill token budget allows -- see
+        ``serving/scheduler.py``.  Greedy decode, numerically identical to
+        ``generate`` with a quantized KV cache (the pool pages hold the same
+        wire format the contiguous quantized cache does).
+
+        Returns a ``ServeReport`` (outputs in submission order + latency /
+        throughput / pool stats)."""
+        from repro.serving.pagepool import KVPagePool, PagePoolConfig
+        from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+        sched_cfg = sched_cfg or SchedulerConfig()
+        n_new = max_new_tokens or self.scfg.max_new_tokens
+        requests = list(requests)  # may be a generator; iterated twice below
+        # raw prompts get fresh rids past any explicit Request's (rids key
+        # page-pool ownership; the scheduler rejects duplicates)
+        next_rid = max((r.rid for r in requests if isinstance(r, Request)), default=-1) + 1
+        reqs: List[Request] = []
+        for r in requests:
+            if isinstance(r, Request):
+                reqs.append(r)
+            else:
+                reqs.append(Request(rid=next_rid, prompt=list(r), max_new_tokens=n_new,
+                                    eos_id=self.scfg.eos_id))
+                next_rid += 1
+        if pool_cfg is None:
+            ps = 16
+            pages_per_seq = -(-self.scfg.max_len // ps)
+            pool_cfg = PagePoolConfig(
+                num_pages=sched_cfg.max_slots * pages_per_seq,
+                page_size=ps, max_len=self.scfg.max_len)
+        pool = KVPagePool(self.cfg, pool_cfg)
+        sched = Scheduler(sched_cfg, pool)
+        for r in reqs:
+            sched.submit(r)
+
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+        decode_steps = prefill_tokens = 0
+        peak_pages = peak_slots = 0
+        # slot->pages assignments only change on admission/retirement, so the
+        # device page table is cached between scheduler events instead of
+        # being rebuilt + re-uploaded on every decode step
+        page_table = None
+        idle_retries = 0
+        while sched.has_work:
+            admitted = sched.admit(now())
+            if not admitted and not sched.running:
+                # nothing runnable yet: sleep until the next arrival, then
+                # retry admission (the scheduler keeps waiting sorted by
+                # arrival; an arrival landing mid-iteration just retries).
+                # With nothing running the pool is empty, so an ARRIVED head
+                # always admits (submit() validated it fits) -- repeated
+                # no-progress retries past its arrival mean invariant breakage
+                nxt = sched.next_arrival()
+                idle_retries = idle_retries + 1 if (nxt is None or nxt <= now()) else 0
+                if nxt is None or idle_retries > 1000:
+                    raise RuntimeError(
+                        "scheduler stalled: an arrived request cannot be admitted "
+                        "into an idle engine"
+                    )
+                time.sleep(max(nxt - now(), 0.0))
+                continue
+            idle_retries = 0
+            # prefill phase (token-budgeted by the scheduler)
+            for req in admitted:
+                last, caches = self._serve_prefill(req.prompt)
+                pool.write_prefill(req.rid, caches, len(req.prompt))
+                prefill_tokens += len(req.prompt)
+                sched.start(req, int(jnp.argmax(last[0])), now())
+            if admitted:
+                page_table = None
+            peak_pages = max(peak_pages, pool.pages_in_use)
+            peak_slots = max(peak_slots, len(sched.running))
+            # decode phase: one dynamic-batch step over the active slots
+            batch = sched.decode_batch()
+            if batch is None:
+                continue
+            seq_ids, tokens, cur_lens = batch
+            if page_table is None:
+                page_table = pool.page_table(seq_ids)
+            logits, pool.caches = self._paged_decode_jit(
+                self.params, jnp.asarray(tokens, jnp.int32), pool.caches,
+                page_table, jnp.asarray(cur_lens, jnp.int32))
+            decode_steps += 1
+            toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            if sched.post_decode(toks.tolist(), now()):
+                page_table = None  # a retirement freed a slot
+
+        wall = now()
+        new_tokens = sum(len(r.out_tokens) for r in reqs)
+        return ServeReport(
+            requests=reqs, wall_time=wall, new_tokens=new_tokens,
+            decode_steps=decode_steps, prefill_tokens=prefill_tokens,
+            peak_pages=peak_pages, peak_slots=peak_slots,
+            page_bytes=pool.bytes_per_page(), pool_bytes=pool.total_bytes(),
+        )
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Outcome of one ``Engine.serve`` run: outputs + serving metrics."""
+
+    requests: List[Any]
+    wall_time: float
+    new_tokens: int
+    decode_steps: int
+    prefill_tokens: int
+    peak_pages: int
+    peak_slots: int
+    page_bytes: int
+    pool_bytes: int
+
+    @property
+    def outputs(self) -> List[List[int]]:
+        """prompt + generated tokens per request, submission order (the same
+        shape ``Engine.generate`` returns)."""
+        return [list(r.prompt) + list(r.out_tokens) for r in self.requests]
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.new_tokens / max(self.wall_time, 1e-9)
+
+    @property
+    def mean_ttft(self) -> float:
+        """Mean time-to-first-token (s) over finished requests."""
+        ts = [r.first_token_time - r.arrival for r in self.requests
+              if r.first_token_time is not None]
+        return sum(ts) / len(ts) if ts else 0.0
+
+    @property
+    def mean_latency(self) -> float:
+        ts = [r.finish_time - r.arrival for r in self.requests
+              if r.finish_time is not None]
+        return sum(ts) / len(ts) if ts else 0.0

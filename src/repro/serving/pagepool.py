@@ -1,0 +1,266 @@
+"""Paged RaZeR-quantized KV pool for continuous batching.
+
+The static engine allocates one contiguous ``(batch, max_len)`` cache per
+sequence slot; at mixed prompt lengths most of that HBM is padding.  The pool
+instead carves KV storage into fixed-size **pages** of ``page_size`` tokens
+shared by all sequences, with a per-sequence page table mapping logical token
+positions to physical pages -- the vLLM PagedAttention layout, applied to the
+4.5-bit wire format.
+
+The page layout IS the existing KV wire format (serving/kvcache.py, paper
+App. C.1): per (token, kv-head), the head dim splits into 16-element quant
+blocks stored as ``hd//2`` code bytes + ``hd//16`` scale-meta bytes.  Blocks
+never span tokens, so ANY page of whole tokens is an integer number of quant
+blocks and ``kv_quantize`` / ``kv_dequantize`` apply per page unchanged:
+
+    k_codes[page, slot, kvh, hd//2]   two FP4 codes per byte
+    k_meta [page, slot, kvh, hd//16]  E4M3 scale (7 bits) + SV-sign bit
+
+Physical page 0 is reserved as the **null page**: page-table rows of inactive
+decode slots (and the tails of short sequences) point at it, so masked lanes
+of the fixed-shape decode step scatter their garbage writes somewhere harmless
+instead of needing a dynamic shape.
+
+Device buffers mirror the engine's per-layer-group cache list (one stacked
+``(count, num_pages, page_size, kvh, ...)`` dict per scan group) so the paged
+decode step slices them exactly like the contiguous caches.  Allocation
+(free-list, per-sequence page lists) is host-side Python: it runs between jit
+steps, never inside them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.models.transformer import layer_groups
+
+NULL_PAGE = 0
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _quantize_scatter(pool, k, v, pids, sids):
+    """Quantize a prefill's K/V (count, S, kvh, hd) and scatter token j into
+    pool page ``pids[j]`` slot ``sids[j]`` -- one compiled call per prefill
+    bucket shape (padded tokens ride along into the null page).  The pool
+    buffers are donated: the caller replaces them with the result, so the
+    update happens in place instead of copying the pool."""
+    from repro.serving.kvcache import kv_quantize
+
+    kc, km = kv_quantize(k)
+    vc, vm = kv_quantize(v)
+    return {
+        "k_codes": pool["k_codes"].at[:, pids, sids].set(kc),
+        "k_meta": pool["k_meta"].at[:, pids, sids].set(km),
+        "v_codes": pool["v_codes"].at[:, pids, sids].set(vc),
+        "v_meta": pool["v_meta"].at[:, pids, sids].set(vm),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class PagePoolConfig:
+    """Sizing knobs for the paged KV pool.
+
+    ``num_pages`` counts usable pages EXCLUDING the reserved null page;
+    ``max_len`` bounds any single sequence (prompt + generated) and fixes the
+    page-table width ``ceil(max_len / page_size)`` the decode step is
+    compiled for.
+    """
+
+    num_pages: int
+    page_size: int = 16
+    max_len: int = 256
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.num_pages < 1:
+            raise ValueError(f"num_pages must be >= 1, got {self.num_pages}")
+
+    @property
+    def pages_per_seq(self) -> int:
+        """Page-table width: worst-case pages one sequence can touch."""
+        return -(-self.max_len // self.page_size)
+
+
+def _check_paged_arch(cfg: ArchConfig) -> None:
+    """The pool stores the GQA wire format; archs whose decode state is not a
+    per-token GQA cache cannot page it (they keep the static engine path)."""
+    # modality frontends are rejected too: Engine.serve has no extras path,
+    # so a VLM/audio prefill would silently drop its frontend embeddings
+    if cfg.mla or cfg.ssm or cfg.block_pattern or cfg.encoder_decoder or cfg.frontend != "none":
+        raise ValueError(
+            "paged KV serving supports pure GQA-attention stacks (dense or MoE); "
+            f"arch {cfg.name!r} has "
+            + ", ".join(
+                k for k, v in [
+                    ("mla", cfg.mla), ("ssm", cfg.ssm),
+                    ("block_pattern", bool(cfg.block_pattern)),
+                    ("encoder_decoder", cfg.encoder_decoder),
+                    (f"a {cfg.frontend} frontend", cfg.frontend != "none"),
+                ] if v
+            )
+            + " -- use Engine.generate (static batching) for it"
+        )
+    if cfg.hd % 16 != 0:
+        raise ValueError(f"quantized KV pages need head_dim % 16 == 0, got hd={cfg.hd}")
+
+
+class KVPagePool:
+    """Block-quantized KV page pool + free-list allocator + page tables.
+
+    Device state lives in ``self.caches`` (functionally updated by the jitted
+    decode step -- the engine writes the new buffers back after each step);
+    everything else is host bookkeeping.
+    """
+
+    def __init__(self, cfg: ArchConfig, pool_cfg: PagePoolConfig):
+        _check_paged_arch(cfg)
+        self.cfg = cfg
+        self.pool_cfg = pool_cfg
+        hd, kvh, ps = cfg.hd, cfg.num_kv_heads, pool_cfg.page_size
+        p = pool_cfg.num_pages + 1  # + reserved null page 0
+        self.caches: List[Dict[str, jnp.ndarray]] = []
+        for _, count in layer_groups(cfg):
+            self.caches.append({
+                "k_codes": jnp.zeros((count, p, ps, kvh, hd // 2), jnp.uint8),
+                "k_meta": jnp.zeros((count, p, ps, kvh, hd // 16), jnp.uint8),
+                "v_codes": jnp.zeros((count, p, ps, kvh, hd // 2), jnp.uint8),
+                "v_meta": jnp.zeros((count, p, ps, kvh, hd // 16), jnp.uint8),
+            })
+        self._free: List[int] = list(range(p - 1, NULL_PAGE, -1))  # pop() -> lowest first
+        self._seq_pages: Dict[int, List[int]] = {}
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def num_free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.pool_cfg.num_pages - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.pool_cfg.page_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.pages_for(n_tokens) <= len(self._free)
+
+    def bytes_per_page(self) -> int:
+        """Wire-format bytes one page holds across all layers (K+V)."""
+        hd, kvh, ps = self.cfg.hd, self.cfg.num_kv_heads, self.pool_cfg.page_size
+        layers = sum(count for _, count in layer_groups(self.cfg))
+        return layers * ps * kvh * 2 * (hd // 2 + hd // 16)
+
+    def total_bytes(self) -> int:
+        return self.bytes_per_page() * (self.pool_cfg.num_pages + 1)
+
+    # -- alloc / free --------------------------------------------------------
+    def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
+        """Reserve pages covering ``n_tokens`` logical positions for a (new)
+        sequence.  Raises if the pool cannot fit it -- the scheduler gates
+        admission on ``can_allocate`` so this only fires on misuse."""
+        if seq_id in self._seq_pages:
+            raise ValueError(f"sequence {seq_id} already holds pages; use append()")
+        need = self.pages_for(n_tokens)
+        if n_tokens > self.pool_cfg.max_len:
+            raise ValueError(
+                f"sequence {seq_id} wants {n_tokens} tokens > pool max_len "
+                f"{self.pool_cfg.max_len} (page-table width is fixed at compile time)"
+            )
+        if need > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: need {need} pages, {len(self._free)} free "
+                f"(admit fewer sequences or grow num_pages)"
+            )
+        pages = [self._free.pop() for _ in range(need)]
+        self._seq_pages[seq_id] = pages
+        return pages
+
+    def append(self, seq_id: int, new_len: int) -> List[int]:
+        """Grow a sequence's page list to cover ``new_len`` tokens (decode
+        append path).  Returns the newly added physical pages."""
+        pages = self._seq_pages[seq_id]
+        need = self.pages_for(new_len)
+        added: List[int] = []
+        if need > self.pool_cfg.pages_per_seq:
+            raise ValueError(
+                f"sequence {seq_id} grew past pool max_len {self.pool_cfg.max_len}"
+            )
+        while len(pages) < need:
+            if not self._free:
+                raise RuntimeError(
+                    f"KV pool exhausted appending to sequence {seq_id}; the "
+                    f"scheduler must reserve decode headroom at admission"
+                )
+            pages.append(self._free.pop())
+            added.append(pages[-1])
+        return added
+
+    def release(self, seq_id: int) -> None:
+        """Return a finished/evicted sequence's pages to the free list."""
+        for pg in self._seq_pages.pop(seq_id):
+            self._free.append(pg)
+
+    def sequence_pages(self, seq_id: int) -> List[int]:
+        return list(self._seq_pages[seq_id])
+
+    # -- page tables ---------------------------------------------------------
+    def page_row(self, seq_id: Optional[int]) -> np.ndarray:
+        """(pages_per_seq,) i32 physical-page row; unused tail (and a ``None``
+        sequence, i.e. an idle decode slot) points at the null page."""
+        row = np.full((self.pool_cfg.pages_per_seq,), NULL_PAGE, np.int32)
+        if seq_id is not None:
+            pages = self._seq_pages[seq_id]
+            row[: len(pages)] = pages
+        return row
+
+    def page_table(self, seq_ids: Sequence[Optional[int]]) -> jnp.ndarray:
+        """(len(seq_ids), pages_per_seq) i32 table for one decode step."""
+        return jnp.asarray(np.stack([self.page_row(s) for s in seq_ids]))
+
+    # -- prefill writes ------------------------------------------------------
+    def write_prefill(self, seq_id: int, caches: List[Dict[str, jnp.ndarray]],
+                      length: int) -> None:
+        """Scatter a prefill's quantized K/V into the sequence's pages.
+
+        ``caches`` is the engine prefill output restricted to batch index 0:
+        one ``{"k": (count, 1, S, kvh, hd), "v": ...}`` dict per layer group
+        (bf16), where S is the engine's padded prefill bucket.  Every position
+        quantizes per token -- the page is an integer number of quant blocks,
+        so this is ``kv_quantize`` applied page-wise unchanged -- and valid
+        positions ``[0, length)`` scatter to ``(page_of(j), j % page_size)``
+        while the padded tail scatters to the null page.  Quantize + scatter
+        run as ONE jitted call (cached per bucket shape): the eager per-op
+        path recompiles per prompt shape and dominates serving wall time.
+        """
+        ps = self.pool_cfg.page_size
+        row = np.asarray(self.page_row(seq_id))
+        s = caches[0]["k"].shape[2]
+        pos = np.arange(s)
+        logical = np.minimum(pos // ps, row.shape[0] - 1)
+        pids = jnp.asarray(np.where(pos < length, row[logical], NULL_PAGE))
+        sids = jnp.asarray(pos % ps)
+        for gi, c in enumerate(self.caches):
+            self.caches[gi] = _quantize_scatter(
+                c, caches[gi]["k"][:, 0], caches[gi]["v"][:, 0], pids, sids)
+
+    # -- debug / tests -------------------------------------------------------
+    def gather_sequence(self, seq_id: int, length: int, group: int = 0):
+        """Dequantized (count, length, kvh, hd) K/V of one sequence -- test
+        and fallback path; the decode hot loop never materializes this."""
+        from repro.serving.kvcache import kv_dequantize
+
+        ps = self.pool_cfg.page_size
+        row = np.asarray(self.page_row(seq_id))
+        pos = np.arange(length)
+        pids, sids = row[pos // ps], pos % ps
+        c = self.caches[group]
+        k = kv_dequantize(c["k_codes"][:, pids, sids], c["k_meta"][:, pids, sids], self.cfg.hd)
+        v = kv_dequantize(c["v_codes"][:, pids, sids], c["v_meta"][:, pids, sids], self.cfg.hd)
+        return k, v

@@ -1,0 +1,213 @@
+"""Continuous-batching scheduler: request admission, prefill/decode
+interleaving under a token budget, decode-slot assignment, completion and
+eviction over the paged KV pool.
+
+The scheduler is pure host-side control flow -- it never touches jax arrays.
+Each engine iteration asks it two questions:
+
+  1. ``admit(now)``        -- which WAITING requests start prefilling this
+                              step (arrival order, gated by a free decode
+                              slot, pool pages for the worst case
+                              ``len(prompt) + max_new_tokens``, and the
+                              per-step prefill token budget);
+  2. ``decode_batch()``    -- the fixed-width slot arrays (token, cur_len,
+                              seq ids) for one dynamic-batch decode step.
+
+and reports back with ``start`` (prefill done, first token sampled) and
+``post_decode`` (one token per active slot), after which the scheduler
+retires finished requests and frees their slot + pages.
+
+Request lifecycle::
+
+    WAITING --admit/prefill--> RUNNING --eos | max_new | len cap--> FINISHED
+
+Admission reserves pages for the whole worst-case sequence up front, so a
+running request can never deadlock on pool growth mid-decode (no preemption
+needed); ``KVPagePool.append`` exists for schedulers that want optimistic
+allocation + eviction instead.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .pagepool import KVPagePool
+
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its measured lifecycle stats."""
+
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    eos_id: int = -1  # -1: never stop early
+
+    # filled in by the scheduler / engine
+    state: str = WAITING
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    prefill_start: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def cur_len(self) -> int:
+        """Valid KV positions: prompt + generated tokens already written.
+        The newest sampled token is fed (and written) by the NEXT decode
+        step, so it does not count yet."""
+        return len(self.prompt) + max(len(self.out_tokens) - 1, 0)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens or (
+            bool(self.out_tokens) and self.out_tokens[-1] == self.eos_id
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Continuous-batching knobs.
+
+    ``max_slots`` is the decode batch width the step function is compiled
+    for; ``prefill_token_budget`` caps prompt tokens admitted per iteration
+    so a burst of long prompts cannot starve running decodes (the
+    prefill/decode interleave ratio knob)."""
+
+    max_slots: int = 8
+    prefill_token_budget: int = 512
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, pool: KVPagePool):
+        self.cfg = cfg
+        self.pool = pool
+        self.waiting: List[Request] = []  # kept sorted by arrival (FIFO on ties)
+        self.running: Dict[int, Request] = {}  # slot -> request
+        self.finished: List[Request] = []
+        self._free_slots: List[int] = list(range(cfg.max_slots - 1, -1, -1))
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        need = len(req.prompt) + req.max_new_tokens
+        if req.state != WAITING or req.out_tokens or req.slot is not None:
+            raise ValueError(
+                f"request {req.rid} carries stale serving state "
+                f"(state={req.state!r}, {len(req.out_tokens)} generated tokens); "
+                f"submit a fresh Request per serve call"
+            )
+        if any(req.rid == r.rid for r in (*self.waiting, *self.running.values(),
+                                          *self.finished)):
+            raise ValueError(
+                f"duplicate request id {req.rid}: rids key page-pool ownership "
+                f"and must be unique within one serve run"
+            )
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt (need >= 1 token)")
+        if need > self.pool.pool_cfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + max_new_tokens "
+                f"({req.max_new_tokens}) = {need} exceeds the pool max_len "
+                f"{self.pool.pool_cfg.max_len}; raise PagePoolConfig.max_len or "
+                f"shorten the request"
+            )
+        if self.pool.pages_for(need) > self.pool.pool_cfg.num_pages:
+            raise ValueError(
+                f"request {req.rid} needs {self.pool.pages_for(need)} pages but the "
+                f"pool has only {self.pool.pool_cfg.num_pages}; grow "
+                f"PagePoolConfig.num_pages"
+            )
+        # admission order is arrival order (stable on ties), regardless of
+        # submission order -- the serve loop relies on waiting[0] being the
+        # next request to become admissible
+        bisect.insort(self.waiting, req, key=lambda r: r.arrival)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest arrival among still-waiting requests (None if none)."""
+        return self.waiting[0].arrival if self.waiting else None
+
+    # -- admission (prefill phase) -------------------------------------------
+    def admit(self, now: float) -> List[Request]:
+        """Admit WAITING requests in arrival order (FIFO on ties) that (a)
+        have arrived, (b) get a free
+        decode slot, (c) fit in the pool at worst case, (d) fit this step's
+        prefill token budget.  Head-of-line blocking is intentional: skipping
+        a too-big head request would starve it forever."""
+        admitted: List[Request] = []
+        budget = self.cfg.prefill_token_budget
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            if req.arrival > now:
+                break
+            if len(req.prompt) > budget and admitted:
+                break  # budget spent this step; prefill next iteration
+            if not self.pool.can_allocate(len(req.prompt) + req.max_new_tokens):
+                break  # wait for a running request to finish and free pages
+            self.waiting.pop(0)
+            self.pool.allocate(req.rid, len(req.prompt) + req.max_new_tokens)
+            req.slot = self._free_slots.pop()
+            req.prefill_start = now
+            budget -= len(req.prompt)
+            admitted.append(req)
+            if budget <= 0:
+                break
+        return admitted
+
+    def start(self, req: Request, first_token: int, now: float) -> None:
+        """Prefill finished: record the first sampled token and either retire
+        the request (eos / max_new == 1) or move it into the decode pool."""
+        req.out_tokens.append(first_token)
+        req.first_token_time = now
+        if req.done:
+            self._retire(req, now)
+        else:
+            req.state = RUNNING
+            self.running[req.slot] = req
+
+    # -- decode phase ---------------------------------------------------------
+    def decode_batch(self):
+        """(seq_ids, tokens, cur_lens) padded to ``max_slots``.
+
+        ``seq_ids[i]`` is None for idle slots; their token is 0 and cur_len 0
+        (the page table maps them to the null page, so their garbage write and
+        logits are inert).  Returns None when nothing is running."""
+        if not self.running:
+            return None
+        seq_ids: List[Optional[int]] = [None] * self.cfg.max_slots
+        tokens = [0] * self.cfg.max_slots
+        cur_lens = [0] * self.cfg.max_slots
+        for slot, req in self.running.items():
+            seq_ids[slot] = req.rid
+            tokens[slot] = req.out_tokens[-1]
+            cur_lens[slot] = req.cur_len
+        return seq_ids, tokens, cur_lens
+
+    def post_decode(self, slot_tokens: Sequence[int], now: float) -> List[Request]:
+        """Record one sampled token per RUNNING slot; retire finished
+        requests (slot + pages freed).  Returns the newly finished."""
+        done: List[Request] = []
+        for slot, req in list(self.running.items()):
+            req.out_tokens.append(int(slot_tokens[slot]))
+            if req.done:
+                del self.running[slot]
+                self._retire(req, now)
+                done.append(req)
+        return done
+
+    def _retire(self, req: Request, now: float) -> None:
+        req.state = FINISHED
+        req.finish_time = now
+        self.pool.release(req.rid)
+        self._free_slots.append(req.slot)
+        req.slot = None
+        self.finished.append(req)

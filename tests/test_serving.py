@@ -100,6 +100,167 @@ def test_engine_packed_moe_mla_arch():
     assert len(out[0]) == 8
 
 
+def test_generate_rejects_empty_prompt():
+    eng, _, _ = _engine()
+    with pytest.raises(ValueError, match="empty"):
+        eng.generate([[1, 2, 3], []])
+    with pytest.raises(ValueError, match="at least one prompt"):
+        eng.generate([])
+
+
+def test_generate_rejects_prompts_that_overflow_max_len():
+    """Regression: a prompt longer than max_len used to truncate silently
+    (dynamic_update_slice clamping); now it fails fast with the fix spelled
+    out."""
+    eng, _, _ = _engine()  # max_len=64, max_new=8
+    long = list(range(1, 80))
+    with pytest.raises(ValueError, match=r"max_len.*raise|raise.*max_len"):
+        eng.generate([long])
+    # len + max_new crossing max_len is also rejected (decode would write
+    # past the cache), and the message names the needed max_len
+    with pytest.raises(ValueError, match="72"):
+        eng.generate([list(range(60))], max_new_tokens=12)
+    # exactly fitting is fine
+    out = eng.generate([list(range(1, 57))], max_new_tokens=8)
+    assert len(out[0]) == 64
+
+
+def test_generate_max_len_cap_skips_pure_ssm():
+    """Recurrent state has no (max_len,) cache, so the overflow check must not
+    reject pure-SSM generates that always worked."""
+    eng, _, _ = _engine("mamba2_370m")  # max_len=64
+    out = eng.generate([list(range(1, 61))], max_new_tokens=8)  # 60 + 8 > 64
+    assert len(out[0]) == 68
+    with pytest.raises(ValueError, match="empty"):
+        eng.generate([[]])
+
+
+# ---------------------------------------------------------------------------
+# quantized KV cache paths (serving/kvcache.py)
+# ---------------------------------------------------------------------------
+def test_quantized_kv_append_at_non_block_cur_len():
+    """Append at cur_len values that are NOT multiples of the 16-element quant
+    block: blocks live along head_dim, so any sequence position must work,
+    scalar or per-sequence vector."""
+    from repro.models.config import ArchConfig
+    from repro.serving.kvcache import quantized_gqa_cache_init, quantized_kv_append
+
+    cfg = get_config("llama3_2_3b").reduced()
+    rng = np.random.default_rng(0)
+    b, kvh, hd = 2, cfg.num_kv_heads, cfg.hd
+    for cur in (0, 3, 7, 17):
+        cache = quantized_gqa_cache_init(cfg, b, 32)
+        k_new = jnp.asarray(rng.standard_normal((b, 1, kvh, hd)), jnp.float32)
+        v_new = jnp.asarray(rng.standard_normal((b, 1, kvh, hd)), jnp.float32)
+        k_full, v_full, cache = quantized_kv_append(cache, k_new, v_new, cur)
+        kc, km = kv_quantize(k_new[:, 0])
+        want = kv_dequantize(kc, km, hd)
+        np.testing.assert_allclose(np.asarray(k_full[:, cur]), np.asarray(want), atol=1e-6)
+        # untouched positions stay zero-coded
+        assert float(jnp.abs(k_full[:, cur + 1 :]).max()) == 0.0
+    # vector cur_len: each sequence writes its own (odd) position
+    cache = quantized_gqa_cache_init(cfg, b, 32)
+    curv = jnp.asarray([5, 11], jnp.int32)
+    k_full, v_full, cache = quantized_kv_append(cache, k_new, v_new, curv)
+    vc, vm = kv_quantize(v_new[:, 0])
+    wantv = kv_dequantize(vc, vm, hd)
+    for i, c in enumerate([5, 11]):
+        np.testing.assert_allclose(np.asarray(v_full[i, c]), np.asarray(wantv[i]), atol=1e-6)
+
+
+def test_quantized_kv_prefill_partial_length():
+    """Prefill writing S < max_len positions (ragged prompt tails) leaves the
+    tail zeroed and round-trips the written span."""
+    from repro.serving.kvcache import quantized_gqa_cache_init, quantized_kv_prefill
+
+    cfg = get_config("llama3_2_3b").reduced()
+    rng = np.random.default_rng(1)
+    b, s, kvh, hd = 2, 5, cfg.num_kv_heads, cfg.hd  # s=5: non-block, non-pow2
+    cache = quantized_gqa_cache_init(cfg, b, 32)
+    k = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, kvh, hd)), jnp.float32)
+    cache = quantized_kv_prefill(cache, k, v)
+    kc, km = kv_quantize(k)
+    np.testing.assert_array_equal(np.asarray(cache["k_codes"][:, :s]), np.asarray(kc))
+    got = kv_dequantize(cache["k_codes"][:, :s], cache["k_meta"][:, :s], hd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(kv_dequantize(kc, km, hd)))
+    assert int(cache["k_codes"][:, s:].max()) == 0
+
+
+def test_check_kv_spec_rejection_messages():
+    """The KV wire decoder is fixed; deviating specs must fail loudly and the
+    message must name every pinned field."""
+    from repro.core.policy import TensorSpec
+    from repro.serving.kvcache import _check_kv_spec
+
+    good = TensorSpec.kv()
+    assert _check_kv_spec(good) is good
+    bad = [
+        good.with_(format="nvfp4"),
+        good.with_(scale_fmt="e3m3"),
+        good.with_(block_size=32),
+        good.with_(special_values=(3.0, -3.0)),
+    ]
+    for spec in bad:
+        with pytest.raises(ValueError) as ei:
+            _check_kv_spec(spec)
+        msg = str(ei.value)
+        for fragment in ("razer", "e4m3", "block_size=16", "5.0"):
+            assert fragment in msg, (fragment, msg)
+        with pytest.raises(ValueError):
+            kv_quantize(jnp.zeros((2, 32)), spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# quantized-activation fast path (registry act kernels)
+# ---------------------------------------------------------------------------
+def test_qdq_activation_routes_through_act_kernel():
+    """qdq_activation must hit the registered fused act kernel (ops wrapper ->
+    Pallas/oracle, dynamic per-block scale, NO tensor scale), not the generic
+    spec.qdq numerics."""
+    from repro.core.qlinear import qdq_activation
+    from repro.core.policy import QuantPolicy
+    from repro.kernels.ref import razer_act_qdq_ref
+
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((4, 64)), jnp.float32)
+    pol = QuantPolicy.fakequant("razer", act_format="razer")
+    got = qdq_activation(x, pol)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(razer_act_qdq_ref(x)))
+    # formats without a registered act kernel keep the spec.qdq fallback
+    pol_nv = QuantPolicy.fakequant("nvfp4", act_format="nvfp4")
+    got_nv = qdq_activation(x, pol_nv)
+    np.testing.assert_array_equal(
+        np.asarray(got_nv), np.asarray(pol_nv.act.qdq(x, axis=-1)))
+    # a razer act spec with a NON-default scale format is honored (generic
+    # numerics), not silently overridden by the kernel's hardcoded e4m3
+    pol_e3 = QuantPolicy.fakequant("razer", act_format="razer", act_scale_fmt="e3m3")
+    got_e3 = qdq_activation(x, pol_e3)
+    np.testing.assert_array_equal(
+        np.asarray(got_e3), np.asarray(pol_e3.act.qdq(x, axis=-1)))
+    assert np.abs(np.asarray(got_e3 - got)).max() > 0
+
+
+def test_packed_serving_quantizes_activations():
+    """W+A packed serving: a packed policy WITH an act spec runs the dynamic
+    act quant in front of the wire-format matmul; without one, activations
+    pass through untouched (weight-only deployment)."""
+    from repro.core.policy import QuantPolicy, TensorSpec
+    from repro.core.qlinear import QuantizedLinear, qlinear
+    from repro.kernels.ref import razer_act_qdq_ref
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 32)) * 0.05, jnp.float32)
+    pol_w = QuantPolicy.packed()
+    pol_wa = QuantPolicy(weight=pol_w.weight, act=TensorSpec.act("razer"), rules=pol_w.rules)
+    lin = QuantizedLinear.create(w, pol_w)
+    y_w = qlinear(x, lin, pol_w)
+    y_wa = qlinear(x, lin, pol_wa)
+    y_want = qlinear(razer_act_qdq_ref(x), lin, pol_w)
+    np.testing.assert_array_equal(np.asarray(y_wa), np.asarray(y_want))
+    assert np.abs(np.asarray(y_wa - y_w)).max() > 0  # the act quant did something
+
+
 @pytest.mark.parametrize("arch", ["mamba2_370m", "recurrentgemma_2b", "whisper_base", "deepseek_v2_236b"])
 def test_engine_exotic_archs(arch):
     eng, cfg, _ = _engine(arch)
