@@ -45,6 +45,7 @@ def main(argv=None) -> None:
         ("fig7_two_pass", kernel_bench.fig7_two_pass_model),
         ("appC1_kv", kv_quant.appC1_kv_quant),
         ("serving_throughput", serving_bench.serving_throughput),
+        ("serving_prefix_cache", serving_bench.serving_prefix_cache),
         ("roofline", roofline.roofline_rows),
     ]
     slow = {"table3_ppl", "table4_accuracy", "table6", "appC1_kv"}

@@ -19,6 +19,15 @@ with per-request TTFT / latency and pool stats printed at the end:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
         --continuous --requests 12 --rate 20 --slots 4
+
+Prefix caching (docs/serving.md#prefix-caching) is ON by default in
+continuous mode: requests sharing a prompt prefix share its quantized KV
+pages and prefill only their suffix, with bit-identical greedy outputs.
+``--no-prefix-cache`` disables it; ``--shared-prefix N`` prepends an
+N-token system prompt to every request to demo the hit rate:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
+        --continuous --requests 12 --shared-prefix 32 --slots 4
 """
 from __future__ import annotations
 
@@ -53,6 +62,13 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4, help="decode slots (continuous mode)")
     ap.add_argument("--prefill-budget", type=int, default=256,
                     help="max prompt tokens prefilled per engine step (continuous mode)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction, default=True,
+                    help="share prompt-prefix pages between requests via the radix "
+                         "prefix cache (continuous mode; bit-identical outputs either "
+                         "way -- docs/serving.md#prefix-caching)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical system-prompt tokens to every "
+                         "request (demo traffic for the prefix cache)")
     ap.add_argument("--ckpt", default=None, help="restore params from a training checkpoint dir")
     args = ap.parse_args(argv)
 
@@ -93,7 +109,8 @@ def main(argv=None):
     eng = Engine(params, cfg, scfg, mesh=mesh)
 
     rng = np.random.default_rng(0)
-    reqs = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 16))).tolist()
+    sys_prompt = rng.integers(1, cfg.vocab_size, size=args.shared_prefix).tolist()
+    reqs = [sys_prompt + rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 16))).tolist()
             for _ in range(args.requests)]
     if cfg.ssm or cfg.block_pattern:
         reqs = [r[:4] for r in reqs]  # recurrent archs: equal lengths
@@ -115,13 +132,19 @@ def main(argv=None):
                           arrival=float(arrivals[i]))
                   for i, p in enumerate(reqs)]
         rep = eng.serve(stream, sched_cfg=SchedulerConfig(
-            max_slots=args.slots, prefill_token_budget=args.prefill_budget))
+            max_slots=args.slots, prefill_token_budget=args.prefill_budget),
+            prefix_cache=args.prefix_cache)
         print(f"{rep.new_tokens} tokens / {rep.wall_time:.2f}s = "
               f"{rep.tokens_per_s:.1f} tok/s over {rep.decode_steps} decode steps "
               f"(slots={args.slots}, packed={args.packed})")
         print(f"  mean TTFT {rep.mean_ttft * 1e3:.1f} ms | mean latency "
               f"{rep.mean_latency * 1e3:.1f} ms | peak {rep.peak_slots} slots, "
               f"{rep.peak_pages} pages ({rep.peak_pages * rep.page_bytes / 1024:.1f} KiB KV)")
+        if args.prefix_cache:
+            print(f"  prefix cache: {rep.cache_hits}/{rep.cache_lookups} hits | "
+                  f"{rep.cached_tokens} cached vs {rep.prefill_tokens} computed prompt "
+                  f"tokens ({rep.cache_hit_rate:.0%} hit rate) | "
+                  f"{rep.cache_evictions} evictions")
         for r in rep.requests[:3]:
             print(f"  prompt[{len(r.prompt)}] @t={r.arrival:.2f}s -> {r.out_tokens}")
         return

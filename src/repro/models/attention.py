@@ -64,8 +64,11 @@ def chunked_attention(
 ):
     """q: (B, Sq, H, hd); k, v: (B, Skv, KVH, hd) with H % KVH == 0.
 
-    Returns (B, Sq, H, hd).  ``q_offset`` is the absolute position of q[0]
-    (for prefill continuation); ``window`` > 0 enables sliding-window masking.
+    Returns (B, Sq, H, hd).  ``q_offset`` is the absolute position of q[0] --
+    a python int or a traced scalar; the prefix-cache continuation prefill
+    passes the (dynamic) cached length, with KV laid out so every entry's
+    logical position IS its buffer index and plain causal masking handles the
+    gathered-page padding.  ``window`` > 0 enables sliding-window masking.
     Grouped-head einsums avoid materializing repeated KV heads.
     """
     b, sq, h, hd = q.shape
@@ -82,7 +85,8 @@ def chunked_attention(
 
     if (
         ATTN_SCHEDULE.get() == "triangular"
-        and causal and q_offset == 0 and qc == kc and sq == skv
+        and causal and isinstance(q_offset, int) and q_offset == 0
+        and qc == kc and sq == skv
     ):
         out = _triangular_attention(qg, kg, vg, qc, window, scale)
         return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd).astype(q.dtype)

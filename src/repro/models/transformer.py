@@ -348,15 +348,30 @@ def init_caches(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     return caches
 
 
+def _qdq_kv(x, hd: int):
+    """Quantize-dequantize through the fixed KV wire format (App. C.1)."""
+    from repro.serving.kvcache import kv_dequantize, kv_quantize
+
+    return kv_dequantize(*kv_quantize(x), hd)
+
+
 def prefill(params, tokens, cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT,
             *, max_len: int, positions3=None, frontend_embeds=None, enc_frames=None,
-            last_positions=None):
+            last_positions=None, qdq_kv: bool = False):
     """Run the full prompt, building KV caches/states.
 
     Returns (last_logits (B, V), caches, enc) -- enc is the encoder output to
     reuse at decode time (whisper) or None.  ``last_positions`` (B,) gives each
     sequence's true prompt length for ragged batches (continuous-batching
     lite): logits are gathered at position length-1 per sequence.
+
+    ``qdq_kv`` makes the prefill attention consume quantize-dequantized K/V
+    (the KV wire format, GQA layers only) instead of the in-pass bf16 values.
+    This is what makes quantized-KV serving *split-invariant*: every token's
+    hidden state then depends on earlier tokens only through their wire bytes,
+    so recomputing a suffix against cached pages (``prefill_paged_suffix``)
+    reproduces the uncached forward bit-for-bit at any split point.  It also
+    matches the decode steps, which always attend the quantized cache.
     """
     b, s = tokens.shape
     x = embed(tokens, params["embed"], cfg.cdtype)
@@ -389,14 +404,24 @@ def prefill(params, tokens, cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT,
                 else:
                     win = cfg.window if (_lt == "a" and cfg.block_pattern) else 0
                     q, k, v = attn._qkv(h, lp["mixer"], cfg, quant, positions, positions3)
-                    mix_raw = attn.chunked_attention(q, k, v, causal=True, window=win)
+                    k = k.astype(cfg.cdtype)
+                    v = v.astype(cfg.cdtype)
+                    if qdq_kv:
+                        # attend the wire-format bytes the cache will hold --
+                        # quantizing the SAME cdtype values the cache stores,
+                        # so attention and cache agree code-for-code
+                        k_att = _qdq_kv(k, cfg.hd)
+                        v_att = _qdq_kv(v, cfg.hd)
+                    else:
+                        k_att, v_att = k, v
+                    mix_raw = attn.chunked_attention(q, k_att, v_att, causal=True, window=win)
                     from repro.core.qlinear import qlinear as _ql
 
                     mix = _ql(mix_raw.reshape(b, s, -1), lp["mixer"]["wo"], quant)
                     cache = attn.gqa_cache_init(cfg, b, max_len, cfg.cdtype)
                     cache = {
-                        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
-                        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+                        "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1),
+                        "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1),
                     }
                 x = xin + mix
             elif _lt == "s":
@@ -473,6 +498,95 @@ def _rglru_prefill(h, mp, cfg, quant):
     y = b_s.astype(h.dtype) * gate
     out = _ql(y, mp["out_proj"], quant)
     return out, {"h": b_s[:, -1, :], "conv": conv_tail.astype(h.dtype)}
+
+
+def prefill_paged_suffix(params, tokens, pool_caches, page_row, pre_len, sfx_len,
+                         cfg: ArchConfig, quant: QuantLike = DEFAULT_QUANT,
+                         *, page_size: int):
+    """Continuation prefill for a prefix-cached request (GQA stacks only).
+
+    ``tokens`` (1, S_b) is the uncached suffix padded to a bucket; ``pre_len``
+    (traced scalar) is the cached token count, so the suffix occupies absolute
+    positions ``[pre_len, pre_len + sfx_len)``; ``page_row`` (NP_b,) holds the
+    leading slice of THIS sequence's physical pages, wide enough to cover the
+    cached prefix (the engine buckets NP_b to a power of two) -- the prefix
+    bytes live there (serving/prefixcache.py put them there: fully shared
+    pages plus an optional copied-on-write partial page).
+
+    Per layer the attended KV buffer is ``[gathered pages | suffix bucket]``:
+    the page row is gathered and dequantized into a static-width
+    ``C = NP_b * page_size`` prefix, and the suffix K/V -- quantize-
+    dequantized through the same wire format, see ``prefill(qdq_kv=True)`` --
+    is written at dynamic offset ``pre_len``.  Every entry's logical position
+    is therefore its buffer index, so plain causal masking with
+    ``q_offset = pre_len`` hides all three garbage spans (stale page bytes in
+    ``[pre_len + S_b, C)``, bucket padding in ``[prompt_len, pre_len + S_b)``,
+    and the copied page's stale tail, overwritten in place): they all sit at
+    positions >= the last valid query.  Because the uncached ``qdq_kv``
+    prefill attends byte-identical values at the same buffer indices, suffix
+    hidden states -- and every decode token after them -- are bit-identical to
+    the uncached run for ANY split point.
+
+    Returns (last_logits (1, V), suffix bf16 caches); the caller scatters the
+    suffix K/V into its pages with ``write_prefill(..., start=pre_len)``.
+    """
+    from repro.serving.kvcache import kv_dequantize
+
+    b, s = tokens.shape
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    c_width = page_row.shape[0] * page_size
+    pre_len = jnp.asarray(pre_len, jnp.int32)
+    x = embed(tokens, params["embed"], cfg.cdtype)
+    positions = pre_len + jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    caches = []
+    for gi, (ltype, count) in enumerate(layer_groups(cfg)):
+        if ltype not in ("a", "m"):
+            raise ValueError(
+                f"prefix-cached prefill supports GQA attention stacks only, got "
+                f"layer type {ltype!r} (serving/pagepool.py rejects these archs)"
+            )
+        lt = ltype
+
+        def body(carry, lp_pool, _lt=lt):
+            x, = carry
+            lp, pool = lp_pool
+            xin = x
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q, k, v = attn._qkv(h, lp["mixer"], cfg, quant, positions)
+            k = k.astype(cfg.cdtype)
+            v = v.astype(cfg.cdtype)
+
+            def kv_buffer(sfx, codes, meta):
+                pre = kv_dequantize(codes[page_row], meta[page_row], hd)
+                pre = pre.reshape(1, c_width, kvh, hd)
+                buf = jnp.concatenate([pre, jnp.zeros_like(sfx)], axis=1)
+                return jax.lax.dynamic_update_slice(buf, sfx, (0, pre_len, 0, 0))
+
+            k_all = kv_buffer(_qdq_kv(k, hd), pool["k_codes"], pool["k_meta"])
+            v_all = kv_buffer(_qdq_kv(v, hd), pool["v_codes"], pool["v_meta"])
+            mix = attn.chunked_attention(q, k_all, v_all, causal=True, q_offset=pre_len)
+            from repro.core.qlinear import qlinear as _ql
+
+            x = xin + _ql(mix.reshape(b, s, -1), lp["mixer"]["wo"], quant)
+            if _lt == "m":
+                h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                y, _ = moe_mod.moe_forward(h2, lp["moe"], cfg, quant=quant)
+                x = x + y
+            else:
+                h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + _mlp_fwd(h2, lp, cfg, quant)
+            return (x,), {"k": k, "v": v}
+
+        (x,), cache_stack = _scan(body, (x,), (params[f"layers_{gi}"], pool_caches[gi]))
+        caches.append(cache_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    idx = (jnp.asarray(sfx_len, jnp.int32) - 1).reshape(1, 1, 1)
+    x_last = jnp.take_along_axis(x, jnp.broadcast_to(idx, (b, 1, x.shape[-1])), axis=1)
+    last = unembed(x_last, head)[:, 0, :]
+    return last, caches
 
 
 def decode_step(params, token, caches, cur_len, cfg: ArchConfig,

@@ -166,7 +166,10 @@ class Engine:
         # decode step would materialize a second full copy of the pool
         # (doubling peak KV HBM -- exactly what the pool exists to avoid)
         self._paged_decode_jit = jax.jit(self._paged_decode_step, donate_argnums=(2,))
-        self._prefill_jit = None  # built lazily by serve() (bucketed retrace)
+        # one shared jitted prefill for both serving modes (compiled per
+        # power-of-two bucket shape); + the prefix-cache suffix continuation
+        self._prefill_jit = None
+        self._suffix_jit = None
 
     # -- internals ----------------------------------------------------------
     def _decode_step(self, params, token, caches, cur_len, enc):
@@ -223,6 +226,34 @@ class Engine:
                     f"request fewer new tokens"
                 )
 
+    def _bucketed_prefill(self, toks: np.ndarray, lens: np.ndarray, *,
+                          max_len: int, qdq_kv: bool):
+        """The shared jitted prefill: compiled once per (batch, bucket) shape
+        -- ``toks`` must already be padded to a power-of-two bucket.  Both
+        serving modes use it: ``serve`` per request (B=1, ``max_len`` = the
+        bucket, ``qdq_kv`` always on -- pool pages hold wire bytes), and
+        ``generate`` per batch (``max_len`` = the cache width, ``qdq_kv`` on
+        when the KV cache is quantized).  Causal masking makes the padded
+        positions inert, so bucket size never changes the valid tokens'
+        values."""
+        if self._prefill_jit is None:
+            def _prefill(params, tokens, lens, *, max_len, qdq_kv):
+                with sharding_ctx(self.mesh):
+                    last, caches, _ = tf.prefill(
+                        params, tokens, self.cfg, self.quant, max_len=max_len,
+                        last_positions=lens, qdq_kv=qdq_kv)
+                return last, caches
+
+            self._prefill_jit = jax.jit(_prefill, static_argnames=("max_len", "qdq_kv"))
+        return self._prefill_jit(self.params, jnp.asarray(toks),
+                                 jnp.asarray(lens, jnp.int32),
+                                 max_len=max_len, qdq_kv=qdq_kv)
+
+    @staticmethod
+    def _bucket(n: int, cap: Optional[int] = None) -> int:
+        b = max(8, 1 << (n - 1).bit_length())
+        return b if cap is None else min(b, cap)
+
     # -- public API ---------------------------------------------------------
     def generate(self, prompts: Sequence[Sequence[int]], extras: Optional[Dict] = None,
                  max_new_tokens: Optional[int] = None) -> List[List[int]]:
@@ -235,14 +266,30 @@ class Engine:
         lens = np.array([len(p) for p in prompts], np.int32)
         if self.cfg.ssm or self.cfg.block_pattern:
             assert len(set(lens.tolist())) == 1, "recurrent archs need equal prompt lengths"
-        s = int(lens.max())
+        # pure-attention stacks reuse the continuous path's jitted
+        # power-of-two-bucketed prefill (one compile per bucket instead of an
+        # eager retrace per prompt-length mix); recurrent state (SSM/RG-LRU)
+        # is corrupted by padded steps and modality frontends need the extras
+        # channel, so those archs keep the exact-length eager prefill
+        bucketed = not (self.cfg.ssm or self.cfg.block_pattern
+                        or self.cfg.encoder_decoder or self.cfg.frontend != "none"
+                        or extras)
+        s = self._bucket(int(lens.max()), cap=self.scfg.max_len) if bucketed \
+            else int(lens.max())
         toks = np.zeros((b, s), np.int32)
         for i, p in enumerate(prompts):
             toks[i, : len(p)] = p
         tokens = jnp.asarray(toks)
         lengths = jnp.asarray(lens)
 
-        last, caches, enc = self._prefill(tokens, lengths, extras)
+        if bucketed:
+            last, caches = self._bucketed_prefill(
+                toks, lens, max_len=self.scfg.max_len, qdq_kv=self.kv_quant)
+            enc = None
+            if self.kv_quant:
+                caches = self._quantize_caches(caches)
+        else:
+            last, caches, enc = self._prefill(tokens, lengths, extras)
         out = [list(p) for p in prompts]
         cur = lengths
         done = np.zeros(b, bool)
@@ -269,27 +316,49 @@ class Engine:
 
     def _serve_prefill(self, prompt: Sequence[int]):
         """Prefill ONE request, padded to a power-of-two bucket so the jitted
-        prefill compiles once per bucket, not once per prompt length.  Causal
-        masking makes the padded positions inert (exp(-inf) contributions are
-        exactly 0), so bucket size never changes the valid tokens' values."""
-        s = len(prompt)
-        bucket = max(8, 1 << (s - 1).bit_length())
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :s] = prompt
-        if self._prefill_jit is None:
-            def _prefill(params, tokens, lens):
-                with sharding_ctx(self.mesh):
-                    last, caches, _ = tf.prefill(
-                        params, tokens, self.cfg, self.quant,
-                        max_len=tokens.shape[1], last_positions=lens)
-                return last, caches
+        prefill compiles once per bucket, not once per prompt length.
 
-            self._prefill_jit = jax.jit(_prefill)
-        return self._prefill_jit(self.params, jnp.asarray(toks),
-                                 jnp.asarray([s], jnp.int32))
+        The serve path always prefills with ``qdq_kv=True``: attention reads
+        the same wire bytes the pool pages will hold, which is what makes a
+        prefix-cached continuation (``_serve_prefill_suffix``) bit-identical
+        to this uncached pass at any split point."""
+        s = len(prompt)
+        toks = np.zeros((1, self._bucket(s)), np.int32)
+        toks[0, :s] = prompt
+        return self._bucketed_prefill(toks, np.asarray([s], np.int32),
+                                      max_len=toks.shape[1], qdq_kv=True)
+
+    def _serve_prefill_suffix(self, req, pool):
+        """Prefill only the uncached suffix of a prefix-cache hit: suffix
+        tokens (bucketed) attend the sequence's cached pages -- gathered and
+        dequantized per layer -- plus themselves, and the first output token
+        is sampled from the last suffix position's logits.  The gathered
+        prefix is bucketed to a power-of-two PAGE count (one compile per
+        (suffix, prefix) bucket pair), not the full page-table width: per-
+        layer dequant of untouched pages would otherwise dominate the very
+        prefill work the cache saves.  Returns (last_logits, suffix caches to
+        scatter at ``start=cached_tokens``)."""
+        c, s = req.cached_tokens, len(req.prompt) - req.cached_tokens
+        ps = pool.pool_cfg.page_size
+        npb = min(1 << (-(-c // ps) - 1).bit_length(), pool.pool_cfg.pages_per_seq)
+        toks = np.zeros((1, self._bucket(s)), np.int32)
+        toks[0, :s] = req.prompt[c:]
+        if self._suffix_jit is None:
+            def _suffix(params, tokens, pool_caches, row, pre_len, sfx_len, *, page_size):
+                with sharding_ctx(self.mesh):
+                    return tf.prefill_paged_suffix(
+                        params, tokens, pool_caches, row, pre_len, sfx_len,
+                        self.cfg, self.quant, page_size=page_size)
+
+            self._suffix_jit = jax.jit(_suffix, static_argnames=("page_size",))
+        return self._suffix_jit(
+            self.params, jnp.asarray(toks), pool.caches,
+            jnp.asarray(pool.page_row(req.rid)[:npb]),
+            jnp.asarray(c, jnp.int32), jnp.asarray(s, jnp.int32),
+            page_size=ps)
 
     def serve(self, requests, *, sched_cfg=None, pool_cfg=None,
-              max_new_tokens: Optional[int] = None):
+              max_new_tokens: Optional[int] = None, prefix_cache: bool = True):
         """Continuous batching: serve a stream of requests over the paged
         RaZeR-quantized KV pool, decoding a dynamic batch each iteration.
 
@@ -302,9 +371,16 @@ class Engine:
         ``generate`` with a quantized KV cache (the pool pages hold the same
         wire format the contiguous quantized cache does).
 
+        ``prefix_cache`` (default on) shares prompt-prefix pages between
+        requests through a radix tree over page-aligned token chunks
+        (``serving/prefixcache.py``): a hit prefills only the uncached
+        suffix, and greedy outputs are BIT-IDENTICAL to the uncached run --
+        prefill attention reads the same wire bytes either way.
+
         Returns a ``ServeReport`` (outputs in submission order + latency /
-        throughput / pool stats)."""
+        throughput / pool / prefix-cache stats)."""
         from repro.serving.pagepool import KVPagePool, PagePoolConfig
+        from repro.serving.prefixcache import PrefixCache
         from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 
         sched_cfg = sched_cfg or SchedulerConfig()
@@ -328,13 +404,14 @@ class Engine:
                 num_pages=sched_cfg.max_slots * pages_per_seq,
                 page_size=ps, max_len=self.scfg.max_len)
         pool = KVPagePool(self.cfg, pool_cfg)
-        sched = Scheduler(sched_cfg, pool)
+        cache = PrefixCache(pool) if prefix_cache else None
+        sched = Scheduler(sched_cfg, pool, cache=cache)
         for r in reqs:
             sched.submit(r)
 
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0
-        decode_steps = prefill_tokens = 0
+        decode_steps = prefill_tokens = cached_tokens = 0
         peak_pages = peak_slots = 0
         # slot->pages assignments only change on admission/retirement, so the
         # device page table is cached between scheduler events instead of
@@ -360,11 +437,20 @@ class Engine:
                 time.sleep(max(nxt - now(), 0.0))
                 continue
             idle_retries = 0
-            # prefill phase (token-budgeted by the scheduler)
+            # prefill phase (token-budgeted by the scheduler; a prefix-cache
+            # hit prefills only the uncached suffix and scatter-writes just
+            # the pages past the shared boundary)
             for req in admitted:
-                last, caches = self._serve_prefill(req.prompt)
-                pool.write_prefill(req.rid, caches, len(req.prompt))
-                prefill_tokens += len(req.prompt)
+                if req.cached_tokens:
+                    pool.flush_forks(req.rid)  # COW copy, after donors' writes
+                    last, caches = self._serve_prefill_suffix(req, pool)
+                    pool.write_prefill(req.rid, caches, len(req.prompt),
+                                       start=req.cached_tokens)
+                else:
+                    last, caches = self._serve_prefill(req.prompt)
+                    pool.write_prefill(req.rid, caches, len(req.prompt))
+                prefill_tokens += len(req.prompt) - req.cached_tokens
+                cached_tokens += req.cached_tokens
                 sched.start(req, int(jnp.argmax(last[0])), now())
             if admitted:
                 page_table = None
@@ -392,6 +478,10 @@ class Engine:
             decode_steps=decode_steps, prefill_tokens=prefill_tokens,
             peak_pages=peak_pages, peak_slots=peak_slots,
             page_bytes=pool.bytes_per_page(), pool_bytes=pool.total_bytes(),
+            cached_tokens=cached_tokens,
+            cache_lookups=cache.lookups if cache else 0,
+            cache_hits=cache.hits if cache else 0,
+            cache_evictions=cache.evictions if cache else 0,
         )
 
 
@@ -408,12 +498,25 @@ class ServeReport:
     peak_slots: int
     page_bytes: int
     pool_bytes: int
+    # prefix-cache outcome: ``prefill_tokens`` counts only COMPUTED prompt
+    # tokens; ``cached_tokens`` counts prompt tokens served from shared /
+    # copied pages instead (all zero with the cache off)
+    cached_tokens: int = 0
+    cache_lookups: int = 0
+    cache_hits: int = 0
+    cache_evictions: int = 0
 
     @property
     def outputs(self) -> List[List[int]]:
         """prompt + generated tokens per request, submission order (the same
         shape ``Engine.generate`` returns)."""
         return [list(r.prompt) + list(r.out_tokens) for r in self.requests]
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the prefix cache."""
+        total = self.cached_tokens + self.prefill_tokens
+        return self.cached_tokens / total if total else 0.0
 
     @property
     def tokens_per_s(self) -> float:

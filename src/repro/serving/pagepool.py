@@ -44,6 +44,13 @@ NULL_PAGE = 0
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(pool, src, dst):
+    """Copy one physical page's wire bytes src -> dst across a layer group's
+    buffers (the copy-on-write fork of a partially reused cached page)."""
+    return {key: buf.at[:, dst].set(buf[:, src]) for key, buf in pool.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _quantize_scatter(pool, k, v, pids, sids):
     """Quantize a prefill's K/V (count, S, kvh, hd) and scatter token j into
     pool page ``pids[j]`` slot ``sids[j]`` -- one compiled call per prefill
@@ -135,6 +142,15 @@ class KVPagePool:
             })
         self._free: List[int] = list(range(p - 1, NULL_PAGE, -1))  # pop() -> lowest first
         self._seq_pages: Dict[int, List[int]] = {}
+        self._pending_forks: Dict[int, tuple] = {}  # seq -> (dst, src), see flush_forks
+        # physical page -> owner count.  Owners are sequences (one ref per
+        # sequence whose page list holds the page) plus, for pages published
+        # into a prefix cache, the cache itself (serving/prefixcache.py takes
+        # one ref per radix node).  A page returns to the free list when its
+        # last owner lets go; refcount > 1 means SHARED, and shared pages are
+        # immutable by construction (prefill/decode only ever write positions
+        # past the shared prefix, which live in sequence-private pages).
+        self._refs: Dict[int, int] = {}
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -160,31 +176,95 @@ class KVPagePool:
     def total_bytes(self) -> int:
         return self.bytes_per_page() * (self.pool_cfg.num_pages + 1)
 
+    # -- refcounting ---------------------------------------------------------
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def incref(self, page: int) -> None:
+        """Add an owner to a live page (prefix-cache publication)."""
+        if page not in self._refs:
+            raise ValueError(
+                f"page {page} is not allocated; only live pages can gain owners"
+            )
+        self._refs[page] += 1
+
+    def decref(self, page: int) -> None:
+        """Drop one owner; the last owner's decref frees the page."""
+        n = self._refs.get(page, 0)
+        if n <= 0:
+            raise ValueError(f"page {page} has no owners to release (double free?)")
+        if n == 1:
+            del self._refs[page]
+            self._free.append(page)
+        else:
+            self._refs[page] = n - 1
+
     # -- alloc / free --------------------------------------------------------
-    def allocate(self, seq_id: int, n_tokens: int) -> List[int]:
+    def allocate(self, seq_id: int, n_tokens: int,
+                 shared: Sequence[int] = (), cow_src: Optional[int] = None) -> List[int]:
         """Reserve pages covering ``n_tokens`` logical positions for a (new)
         sequence.  Raises if the pool cannot fit it -- the scheduler gates
-        admission on ``can_allocate`` so this only fires on misuse."""
+        admission on ``can_allocate`` so this only fires on misuse.
+
+        ``shared`` are live pages (a cached prefix, in logical order) the
+        sequence joins as a co-owner -- they cost no free pages.  ``cow_src``
+        forks one more page: a fresh page is popped and the sequence owns the
+        COPY (the partially reused cached page stays immutable; the sequence
+        overwrites the copied tail in place).  The device-side byte copy is
+        DEFERRED to ``flush_forks``: at admission time a same-batch donor may
+        not have prefilled the source page yet -- the engine flushes right
+        before this sequence's own prefill, by which point every
+        earlier-admitted write has landed.  The source holds an extra ref
+        until the flush so eviction cannot recycle it in between.  The
+        remainder comes fresh from the free list."""
         if seq_id in self._seq_pages:
-            raise ValueError(f"sequence {seq_id} already holds pages; use append()")
+            raise ValueError(
+                f"double allocation: sequence {seq_id} already holds pages "
+                f"{self._seq_pages[seq_id]}; release() it first (decode growth "
+                f"goes through append())"
+            )
         need = self.pages_for(n_tokens)
         if n_tokens > self.pool_cfg.max_len:
             raise ValueError(
                 f"sequence {seq_id} wants {n_tokens} tokens > pool max_len "
                 f"{self.pool_cfg.max_len} (page-table width is fixed at compile time)"
             )
-        if need > len(self._free):
-            raise RuntimeError(
-                f"KV pool exhausted: need {need} pages, {len(self._free)} free "
-                f"(admit fewer sequences or grow num_pages)"
+        n_fresh = need - len(shared)
+        if n_fresh < 0 or (cow_src is not None and n_fresh < 1):
+            raise ValueError(
+                f"sequence {seq_id}: {len(shared)} shared pages"
+                + ("" if cow_src is None else " + a COW fork")
+                + f" exceed the {need} pages {n_tokens} tokens need"
             )
-        pages = [self._free.pop() for _ in range(need)]
+        if n_fresh > len(self._free):
+            raise RuntimeError(
+                f"KV pool exhausted: need {n_fresh} fresh pages, {len(self._free)} "
+                f"free (admit fewer sequences or grow num_pages)"
+            )
+        for pg in shared:
+            self.incref(pg)
+        pages = list(shared)
+        if cow_src is not None:
+            dst = self._free.pop()
+            self._refs[dst] = 1
+            self.incref(cow_src)  # pin the source until the copy happens
+            self._pending_forks[seq_id] = (dst, cow_src)
+            pages.append(dst)
+        while len(pages) < need:
+            pg = self._free.pop()
+            self._refs[pg] = 1
+            pages.append(pg)
         self._seq_pages[seq_id] = pages
         return pages
 
     def append(self, seq_id: int, new_len: int) -> List[int]:
         """Grow a sequence's page list to cover ``new_len`` tokens (decode
         append path).  Returns the newly added physical pages."""
+        if seq_id not in self._seq_pages:
+            raise ValueError(
+                f"append() for unknown sequence {seq_id}: it holds no pages "
+                f"(allocate() it first, or it was already released)"
+            )
         pages = self._seq_pages[seq_id]
         need = self.pages_for(new_len)
         added: List[int] = []
@@ -199,13 +279,34 @@ class KVPagePool:
                     f"scheduler must reserve decode headroom at admission"
                 )
             pages.append(self._free.pop())
+            self._refs[pages[-1]] = 1
             added.append(pages[-1])
         return added
 
+    def flush_forks(self, seq_id: int) -> None:
+        """Execute the sequence's deferred copy-on-write page copy (no-op if
+        none pending).  Called right before the sequence's own prefill reads
+        the copy -- every earlier-admitted prefill has written by then."""
+        if seq_id in self._pending_forks:
+            dst, src = self._pending_forks.pop(seq_id)
+            for gi, c in enumerate(self.caches):
+                self.caches[gi] = _copy_page(
+                    c, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
+            self.decref(src)
+
     def release(self, seq_id: int) -> None:
-        """Return a finished/evicted sequence's pages to the free list."""
+        """Drop a finished/evicted sequence's ownership of its pages.  Private
+        pages return to the free list; pages a prefix cache (or another
+        sequence) still owns merely lose one owner."""
+        if seq_id in self._pending_forks:  # evicted before it ever prefilled
+            self.decref(self._pending_forks.pop(seq_id)[1])
+        if seq_id not in self._seq_pages:
+            raise ValueError(
+                f"release() for unknown sequence {seq_id}: it holds no pages "
+                f"(never allocated, or already released)"
+            )
         for pg in self._seq_pages.pop(seq_id):
-            self._free.append(pg)
+            self.decref(pg)
 
     def sequence_pages(self, seq_id: int) -> List[int]:
         return list(self._seq_pages[seq_id])
@@ -226,7 +327,7 @@ class KVPagePool:
 
     # -- prefill writes ------------------------------------------------------
     def write_prefill(self, seq_id: int, caches: List[Dict[str, jnp.ndarray]],
-                      length: int) -> None:
+                      length: int, start: int = 0) -> None:
         """Scatter a prefill's quantized K/V into the sequence's pages.
 
         ``caches`` is the engine prefill output restricted to batch index 0:
@@ -234,15 +335,19 @@ class KVPagePool:
         (bf16), where S is the engine's padded prefill bucket.  Every position
         quantizes per token -- the page is an integer number of quant blocks,
         so this is ``kv_quantize`` applied page-wise unchanged -- and valid
-        positions ``[0, length)`` scatter to ``(page_of(j), j % page_size)``
-        while the padded tail scatters to the null page.  Quantize + scatter
-        run as ONE jitted call (cached per bucket shape): the eager per-op
-        path recompiles per prompt shape and dominates serving wall time.
+        positions ``[start, length)`` (cache index j holds token ``start + j``;
+        a prefix-cached suffix prefill passes ``start = cached_len``) scatter
+        to ``(page_of(start + j), (start + j) % page_size)`` while the padded
+        tail scatters to the null page.  A nonzero ``start`` never touches the
+        shared prefix pages: they cover tokens ``[0, start)`` only.  Quantize +
+        scatter run as ONE jitted call (cached per bucket shape): the eager
+        per-op path recompiles per prompt shape and dominates serving wall
+        time.
         """
         ps = self.pool_cfg.page_size
         row = np.asarray(self.page_row(seq_id))
         s = caches[0]["k"].shape[2]
-        pos = np.arange(s)
+        pos = start + np.arange(s)
         logical = np.minimum(pos // ps, row.shape[0] - 1)
         pids = jnp.asarray(np.where(pos < length, row[logical], NULL_PAGE))
         sids = jnp.asarray(pos % ps)

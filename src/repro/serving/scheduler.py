@@ -56,6 +56,9 @@ class Request:
     prefill_start: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # prefix-cache outcome: leading prompt tokens whose KV came from shared /
+    # copied pool pages instead of being recomputed (0 = cache off or miss)
+    cached_tokens: int = 0
 
     @property
     def cur_len(self) -> int:
@@ -85,9 +88,14 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, pool: KVPagePool):
+    def __init__(self, cfg: SchedulerConfig, pool: KVPagePool, cache=None):
+        """``cache`` is an optional ``serving.prefixcache.PrefixCache`` over
+        the same pool: admission then charges only the uncached suffix against
+        the prefill token budget, shared pages reserve no free pages, and pool
+        pressure triggers LRU eviction of unreferenced cached pages."""
         self.cfg = cfg
         self.pool = pool
+        self.cache = cache
         self.waiting: List[Request] = []  # kept sorted by arrival (FIFO on ties)
         self.running: Dict[int, Request] = {}  # slot -> request
         self.finished: List[Request] = []
@@ -137,27 +145,69 @@ class Scheduler:
         return self.waiting[0].arrival if self.waiting else None
 
     # -- admission (prefill phase) -------------------------------------------
+    def _reserve(self, req: Request, match) -> bool:
+        """Try to free enough pool pages for ``req`` given a prefix-cache
+        ``match`` (or None): shared pages reserve nothing; the COW fork and
+        every page past the cached prefix come from the free list, evicting
+        LRU unreferenced cached pages under pressure (matched pages pinned)."""
+        shared = list(match.pages) if match is not None else []
+        need = self.pool.pages_for(len(req.prompt) + req.max_new_tokens)
+        fresh = need - len(shared)
+        short = fresh - self.pool.num_free_pages
+        if short > 0 and self.cache is not None:
+            protect = shared + ([match.cow_page] if match and match.cow_page is not None
+                                else [])
+            self.cache.evict(short, protect=protect)
+        return fresh <= self.pool.num_free_pages
+
     def admit(self, now: float) -> List[Request]:
         """Admit WAITING requests in arrival order (FIFO on ties) that (a)
         have arrived, (b) get a free
         decode slot, (c) fit in the pool at worst case, (d) fit this step's
         prefill token budget.  Head-of-line blocking is intentional: skipping
-        a too-big head request would starve it forever."""
+        a too-big head request would starve it forever.
+
+        With a prefix cache attached, the head request's prompt is first
+        matched against the radix tree: only the uncached suffix counts
+        against the prefill token budget, shared pages reserve no free pages,
+        and a page shortfall evicts LRU unreferenced cached pages before
+        giving up.  If the pool cannot host the request WITH its match (the
+        matched pages themselves are pinned against eviction), admission
+        retries matchless rather than stalling on a full-but-idle pool."""
         admitted: List[Request] = []
         budget = self.cfg.prefill_token_budget
         while self.waiting and self._free_slots:
             req = self.waiting[0]
             if req.arrival > now:
                 break
-            if len(req.prompt) > budget and admitted:
+            match = self.cache.match(req.prompt) if self.cache is not None else None
+            cached = match.cached_len if match is not None else 0
+            if len(req.prompt) - cached > budget and admitted:
                 break  # budget spent this step; prefill next iteration
-            if not self.pool.can_allocate(len(req.prompt) + req.max_new_tokens):
-                break  # wait for a running request to finish and free pages
+            if not self._reserve(req, match):
+                if match is None or not cached:
+                    break  # wait for a running request to finish and free pages
+                match, cached = None, 0  # pinning the match starved the pool
+                if len(req.prompt) > budget and admitted:
+                    break
+                if not self._reserve(req, None):
+                    break
             self.waiting.pop(0)
-            self.pool.allocate(req.rid, len(req.prompt) + req.max_new_tokens)
+            self.pool.allocate(
+                req.rid, len(req.prompt) + req.max_new_tokens,
+                shared=match.pages if match is not None else (),
+                cow_src=match.cow_page if match is not None else None)
+            if self.cache is not None:
+                self.cache.record(match)  # one lookup/hit per admitted request
+                # publish the request's full prompt chunks NOW, pointing at its
+                # just-allocated pages: the engine prefills admitted requests
+                # in order, so a same-batch sharer's suffix prefill always
+                # reads pages this request's prefill has already written
+                self.cache.insert(req.prompt, self.pool.sequence_pages(req.rid))
+            req.cached_tokens = cached
             req.slot = self._free_slots.pop()
             req.prefill_start = now
-            budget -= len(req.prompt)
+            budget -= len(req.prompt) - cached
             admitted.append(req)
             if budget <= 0:
                 break

@@ -1,0 +1,365 @@
+"""Prefix-caching subsystem tests: radix tree match/insert/evict, page-pool
+refcounting and copy-on-write, scheduler integration (suffix-only budget and
+reservation), and the acceptance criterion -- greedy outputs bit-identical
+with the cache on vs off for any split point."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import QuantPolicy
+from repro.models import transformer as tf
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.pagepool import KVPagePool, PagePoolConfig
+from repro.serving.prefixcache import PrefixCache
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+
+def _cfg(arch="llama3_2_3b"):
+    return get_config(arch).reduced()
+
+
+def _engine(arch="llama3_2_3b", **kw):
+    cfg = _cfg(arch)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("max_new_tokens", 6)
+    kw.setdefault("kv_quant", True)
+    return Engine(params, cfg, ServeConfig(**kw)), cfg
+
+
+def _pool(num_pages=32, ps=4, max_len=64, arch="llama3_2_3b"):
+    return KVPagePool(_cfg(arch), PagePoolConfig(num_pages=num_pages, page_size=ps,
+                                                 max_len=max_len))
+
+
+SHARED = [7, 3, 9, 4, 2, 8, 6, 1]  # two full pages at ps=4
+
+
+# ---------------------------------------------------------------------------
+# pool refcounting + fail-fast (satellite)
+# ---------------------------------------------------------------------------
+def test_pool_refcounts_shared_pages_across_release_order():
+    """Two sequences sharing a prefix: whichever releases first, shared pages
+    stay live until the LAST owner lets go; private pages free immediately."""
+    pool = _pool(num_pages=8)
+    a = pool.allocate(0, 10)  # 3 pages, refcount 1 each
+    b = pool.allocate(1, 10, shared=a[:2])  # shares 2, 1 fresh
+    assert pool.sequence_pages(1)[:2] == a[:2]
+    assert [pool.refcount(p) for p in a] == [2, 2, 1]
+    free0 = pool.num_free_pages
+    pool.release(0)  # shared pages survive: seq 1 still owns them
+    assert pool.num_free_pages == free0 + 1  # only a[2] freed
+    assert [pool.refcount(p) for p in a[:2]] == [1, 1]
+    pool.release(1)  # last owner -> everything freed
+    assert pool.num_free_pages == 8
+    assert pool.refcount(a[0]) == 0
+    # reversed order: first release drops the co-owner, pages stay for seq 0
+    a = pool.allocate(0, 10)
+    pool.allocate(1, 10, shared=a[:2])
+    pool.release(1)
+    assert [pool.refcount(p) for p in a] == [1, 1, 1]
+    pool.release(0)
+    assert pool.num_free_pages == 8
+
+
+def test_pool_fail_fast_on_misuse():
+    """Satellite: double-allocation of a live seq_id and append/release of an
+    unknown sequence raise actionable errors instead of corrupting the
+    free-list."""
+    pool = _pool(num_pages=8)
+    pool.allocate(0, 10)
+    with pytest.raises(ValueError, match="double allocation.*release"):
+        pool.allocate(0, 4)
+    with pytest.raises(ValueError, match="unknown sequence 5.*allocate"):
+        pool.append(5, 8)
+    with pytest.raises(ValueError, match="unknown sequence 5"):
+        pool.release(5)
+    with pytest.raises(ValueError, match="not allocated"):
+        pool.incref(7)
+    # shared/cow bookkeeping is validated too
+    with pytest.raises(ValueError, match="exceed"):
+        pool.allocate(1, 4, shared=pool.sequence_pages(0)[:2])  # 2 shared > 1 needed
+    pool.release(0)
+    with pytest.raises(ValueError, match="no owners"):
+        pool.decref(2)
+
+
+def test_pool_cow_fork_is_deferred_and_isolated():
+    """A COW fork snapshots the source page only at flush_forks() -- writes
+    landing between admission and flush are captured, and afterwards the copy
+    diverges from its source."""
+    cfg = _cfg()
+    pool = _pool(num_pages=8)
+    rng = np.random.default_rng(0)
+    count = tf.layer_groups(cfg)[0][1]
+
+    def mk_caches(s):
+        return [{
+            "k": jnp.asarray(rng.standard_normal((count, 1, s, cfg.num_kv_heads, cfg.hd)),
+                             jnp.float32),
+            "v": jnp.asarray(rng.standard_normal((count, 1, s, cfg.num_kv_heads, cfg.hd)),
+                             jnp.float32),
+        } for _ in tf.layer_groups(cfg)]
+
+    donor_pages = pool.allocate(0, 8)
+    src = donor_pages[0]
+    forked = pool.allocate(1, 8, shared=(), cow_src=src)
+    assert pool.refcount(src) == 2  # donor + pending-fork pin
+    pool.write_prefill(0, mk_caches(8), 8)  # donor writes AFTER the fork was taken
+    pool.flush_forks(1)
+    assert pool.refcount(src) == 1  # pin dropped
+    k_src, _ = pool.gather_sequence(0, 4)
+    # the copy holds the donor's post-admission bytes
+    row = pool.sequence_pages(1)
+    assert row[0] == forked[0] and forked[0] != src
+    k_fork, _ = pool.gather_sequence(1, 4)
+    np.testing.assert_array_equal(np.asarray(k_src), np.asarray(k_fork))
+    # overwriting the copy leaves the source untouched
+    pool.write_prefill(1, mk_caches(8), 4, start=0)
+    k_src2, _ = pool.gather_sequence(0, 4)
+    np.testing.assert_array_equal(np.asarray(k_src), np.asarray(k_src2))
+    assert np.abs(np.asarray(pool.gather_sequence(1, 4)[0]) - np.asarray(k_src)).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# radix tree
+# ---------------------------------------------------------------------------
+def test_radix_match_insert_and_branching():
+    pool = _pool(num_pages=16)
+    cache = PrefixCache(pool)
+    prompt = SHARED + [11, 12]
+    pages = pool.allocate(0, len(prompt))  # 3 pages
+    assert cache.match(prompt).cached_len == 0  # empty tree
+    cache.insert(prompt, pages)
+    assert cache.cached_pages == 2  # only full chunks publish
+    assert [pool.refcount(p) for p in pages] == [2, 2, 1]
+    # identical prompt: both full chunks hit outright (the len-1 clamp only
+    # bites when the prompt ENDS on a cached page boundary)
+    m = cache.match(list(prompt))
+    assert m.pages == (pages[0], pages[1]) and m.cow_page is None and m.cached_len == 8
+    # diverging second chunk -> branch: one shared page + COW of the divergent
+    m2 = cache.match(SHARED[:5] + [99, 98, 97])
+    assert m2.pages == (pages[0],) and m2.partial == 1 and m2.cached_len == 5
+    # a different first token misses entirely
+    assert cache.match([99] + SHARED).cached_len == 0
+    # inserting a branch adds a sibling, sharing the common first chunk
+    pages_b = pool.allocate(1, 8, shared=[pages[0]])
+    cache.insert(SHARED[:4] + [99, 98, 97, 96], pages_b)
+    assert cache.cached_pages == 3
+    assert len(cache.root.children) == 1  # still one first chunk
+    assert len(next(iter(cache.root.children.values())).children) == 2
+
+
+def test_radix_match_prefix_longer_than_prompt():
+    """Satellite edge: the tree holds a LONGER prefix than the new prompt;
+    the match clamps to len(prompt)-1 and reports the tail page as COW."""
+    pool = _pool(num_pages=16)
+    cache = PrefixCache(pool)
+    long_prompt = SHARED + [11, 12, 13, 14]  # 12 tokens = 3 full chunks
+    pages = pool.allocate(0, len(long_prompt))
+    cache.insert(long_prompt, pages)
+    assert cache.cached_pages == 3
+    # new prompt is a strict prefix of the cached one, cut mid-page
+    m = cache.match(SHARED[:6])
+    assert m.pages == (pages[0],) and m.cow_page == pages[1]
+    assert m.cached_len == 5  # 4 full + 1 partial (limit = 5)
+    # page-aligned strict prefix: the clamp turns the last full chunk to COW
+    m2 = cache.match(SHARED)
+    assert m2.pages == (pages[0],) and m2.cow_page == pages[1] and m2.cached_len == 7
+
+
+def test_radix_eviction_lru_refcount_and_cascade():
+    pool = _pool(num_pages=8)
+    cache = PrefixCache(pool)
+    pages = pool.allocate(0, 12)  # 3 pages: chunks 0,1 publish
+    cache.insert(SHARED + [11, 12, 13, 14][:4], pages)  # 12 tokens, 3 full chunks
+    assert cache.cached_pages == 3
+    # live sequence pins everything: nothing evictable
+    assert cache.evictable_pages() == 0
+    assert cache.evict(3) == 0
+    pool.release(0)
+    assert cache.evictable_pages() == 3
+    # leaves evict first, cascading upward; protected pages are pinned
+    assert cache.evict(1) == 1 and cache.cached_pages == 2
+    assert cache.evict(5, protect=[pages[0]]) == 1  # chunk1 freed, chunk0 pinned
+    assert cache.cached_pages == 1
+    assert cache.evict(5) == 1 and cache.cached_pages == 0
+    assert pool.num_free_pages == 8
+    # LRU order: the least recently matched branch goes first
+    a = pool.allocate(0, 4)
+    b = pool.allocate(1, 4)
+    cache.insert([1, 2, 3, 4], a)
+    cache.insert([5, 6, 7, 8], b)
+    pool.release(0)
+    pool.release(1)
+    cache.match([1, 2, 3, 4, 9])  # bump branch a
+    cache.evict(1)
+    assert [n.page for n in cache._nodes()] == [a[0]]  # b evicted first
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration
+# ---------------------------------------------------------------------------
+def _sched(cache=True, num_pages=16, ps=4, max_len=48, slots=4, budget=512):
+    pool = _pool(num_pages=num_pages, ps=ps, max_len=max_len)
+    pc = PrefixCache(pool) if cache else None
+    return Scheduler(SchedulerConfig(max_slots=slots, prefill_token_budget=budget),
+                     pool, cache=pc), pool, pc
+
+
+def test_scheduler_charges_only_uncached_suffix():
+    """Satellite/tentpole accounting: a hit charges just the suffix against
+    the prefill token budget, and shared pages reserve nothing."""
+    sched, pool, cache = _sched(budget=6, num_pages=16)
+    sched.submit(Request(rid=0, prompt=SHARED[:6], max_new_tokens=2))  # 6 <= budget
+    [a] = sched.admit(0.0)
+    assert a.cached_tokens == 0
+    sched.start(a, 5, 0.0)
+    # same-prefix request: 8-token prompt, 4 cached -> suffix 4 fits budget 6
+    # (uncached it would NOT have been admitted alongside another prompt)
+    sched.submit(Request(rid=1, prompt=SHARED[:4] + [11, 12, 13, 14], max_new_tokens=2))
+    sched.submit(Request(rid=2, prompt=SHARED[:4] + [21, 22], max_new_tokens=2))
+    admitted = sched.admit(0.0)
+    assert [r.cached_tokens for r in admitted] == [4, 4]
+    assert sum(len(r.prompt) - r.cached_tokens for r in admitted) <= 6
+    # shared pages reserved nothing: rid1 shares page0 with rid0
+    assert pool.sequence_pages(1)[0] == pool.sequence_pages(0)[0]
+    assert pool.refcount(pool.sequence_pages(0)[0]) >= 3  # 3 seqs + cache
+
+
+def test_scheduler_evicts_under_pool_pressure_mid_decode():
+    """Satellite edge: a full pool with idle cached pages evicts them to admit
+    new work while another sequence keeps decoding -- without touching the
+    decoder's pages."""
+    sched, pool, cache = _sched(num_pages=6, ps=4, max_len=32, slots=2)
+    # donor fills the cache then finishes
+    sched.submit(Request(rid=0, prompt=SHARED, max_new_tokens=1))
+    [a] = sched.admit(0.0)
+    sched.start(a, 5, 0.0)  # max_new=1 -> retires; its private page frees but
+    # the 2 published chunks persist in the cache (refcount 1)
+    assert cache.cached_pages == 2 and pool.num_free_pages == 6 - 2
+    # a decoder occupies part of the pool
+    sched.submit(Request(rid=1, prompt=[50, 51, 52], max_new_tokens=4))
+    [b] = sched.admit(0.0)
+    sched.start(b, 6, 0.0)
+    decoder_pages = pool.sequence_pages(1)
+    # an unrelated request that needs more than the free pages: cached pages
+    # must be evicted (they are refcount-1 now) to admit it
+    sched.submit(Request(rid=2, prompt=[60, 61, 62, 63, 64, 65], max_new_tokens=6))
+    [c] = sched.admit(0.1)
+    assert c.rid == 2 and cache.evictions >= 1
+    assert pool.sequence_pages(1) == decoder_pages  # decoder untouched
+    sched.post_decode([9, 9], now=0.2)
+
+
+def test_scheduler_falls_back_matchless_when_pinning_starves_pool():
+    """If honoring the match (pinned pages + COW fork) cannot fit the pool but
+    a matchless admission can, the scheduler retries without the match
+    instead of stalling an idle engine."""
+    # pool of exactly the request's worst case: a COW fork would need one
+    # extra page beyond num_pages - shared
+    sched, pool, cache = _sched(num_pages=3, ps=4, max_len=12, slots=2)
+    sched.submit(Request(rid=0, prompt=SHARED, max_new_tokens=1))
+    [a] = sched.admit(0.0)
+    sched.start(a, 5, 0.0)  # retires; 2 cached pages remain
+    sched.submit(Request(rid=1, prompt=list(SHARED), max_new_tokens=4))  # needs 3 pages
+    [b] = sched.admit(0.0)
+    assert b.rid == 1 and b.cached_tokens in (0, 7)
+    assert len(pool.sequence_pages(1)) == 3  # admitted either way
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: bit-identical greedy decode, cache on vs off (acceptance)
+# ---------------------------------------------------------------------------
+def _mk(prompts, n_new=6, stagger=0.0):
+    return [Request(rid=i, prompt=list(p), max_new_tokens=n_new,
+                    arrival=stagger * i) for i, p in enumerate(prompts)]
+
+
+def _assert_on_off_identical(eng, prompts, pool_cfg, n_new=6, stagger=0.0, **kw):
+    off = eng.serve(_mk(prompts, n_new, stagger), pool_cfg=pool_cfg,
+                    prefix_cache=False, **kw)
+    on = eng.serve(_mk(prompts, n_new, stagger), pool_cfg=pool_cfg,
+                   prefix_cache=True, **kw)
+    assert on.outputs == off.outputs
+    return on, off
+
+
+def test_serve_bit_identical_mixed_split_points():
+    """Acceptance criterion: greedy outputs identical with the cache on vs
+    off for aligned, partial (COW), super-prefix and miss split points."""
+    eng, _ = _engine()
+    prompts = [
+        SHARED + [11, 12, 13],          # aligned 8-token hit for later reqs
+        SHARED + [14, 15],              # aligned hit
+        SHARED + [11, 12, 13, 14, 15],  # longest-match continuation
+        SHARED[:5] + [20, 21],          # partial-page COW hit (split at 5)
+        list(SHARED),                   # cached prefix longer than prompt
+        [40, 41, 42],                   # pure miss
+    ]
+    on, _ = _assert_on_off_identical(
+        eng, prompts, PagePoolConfig(num_pages=48, page_size=4, max_len=64))
+    assert on.cache_hits >= 4 and on.cached_tokens > 0
+    assert on.prefill_tokens + on.cached_tokens == sum(len(p) for p in prompts)
+
+
+def test_serve_bit_identical_subpage_page_size():
+    """Sub-page page_size (3: does not divide anything) still bit-identical;
+    split points land mid-page constantly."""
+    eng, _ = _engine(max_len=48)
+    prompts = [SHARED + [11, 12], SHARED + [13], SHARED[:7] + [21, 22]]
+    on, _ = _assert_on_off_identical(
+        eng, prompts, PagePoolConfig(num_pages=40, page_size=3, max_len=48))
+    assert on.cached_tokens > 0
+
+
+def test_serve_bit_identical_packed_moe():
+    """Acceptance: packed-MoE configs (wire-format expert banks) serve
+    bit-identically with the cache on."""
+    eng, _ = _engine("dbrx_132b", max_len=48, max_new_tokens=4,
+                     kv_quant=False, quant=QuantPolicy.packed(kv_quant=True))
+    prompts = [SHARED + [11, 12], SHARED + [13, 14], SHARED[:6] + [15]]
+    on, _ = _assert_on_off_identical(
+        eng, prompts, PagePoolConfig(num_pages=40, page_size=4, max_len=48), n_new=4)
+    assert on.cached_tokens > 0
+
+
+def test_serve_hit_after_donor_finished():
+    """Satellite edge: the donor finished (slot + seq refs gone) long before
+    the sharer arrives; its published pages must still hit -- and the output
+    must equal the donor-less run."""
+    eng, _ = _engine()
+    pool_cfg = PagePoolConfig(num_pages=32, page_size=4, max_len=64)
+    prompts = [SHARED + [11, 12], SHARED + [21, 22]]
+    # stagger far enough that req 0 fully completes before req 1 arrives
+    on, off = _assert_on_off_identical(eng, prompts, pool_cfg, stagger=1.2,
+                                       sched_cfg=SchedulerConfig(max_slots=1))
+    assert on.cache_hits >= 1 and on.cached_tokens >= 8
+    assert all(r.state == "finished" for r in on.requests)
+
+
+def test_serve_fork_exactly_at_page_boundary():
+    """Satellite edge: split point == a page boundary (prompt extends the
+    cached prefix starting exactly on a fresh page; no COW needed) and
+    page-aligned identical prompts (clamp forces a COW of the final chunk)."""
+    eng, _ = _engine()
+    pool_cfg = PagePoolConfig(num_pages=32, page_size=4, max_len=64)
+    prompts = [list(SHARED), SHARED + [30, 31, 32, 33], list(SHARED)]
+    on, _ = _assert_on_off_identical(eng, prompts, pool_cfg)
+    assert on.cached_tokens >= 8 + 7
+    rep = eng.serve(_mk(prompts), pool_cfg=pool_cfg, prefix_cache=True)
+    # aligned split: req 1 shares both full chunks outright
+    assert rep.requests[1].cached_tokens == 8
+
+
+def test_serve_report_cache_stats_and_off_defaults():
+    eng, _ = _engine()
+    rep = eng.serve(_mk([SHARED + [11], SHARED + [12]]),
+                    pool_cfg=PagePoolConfig(num_pages=32, page_size=4, max_len=64))
+    assert rep.cache_lookups == 2 and rep.cache_hits == 1
+    assert 0.0 < rep.cache_hit_rate < 1.0
+    assert rep.cached_tokens == rep.requests[1].cached_tokens == 8
+    off = eng.serve(_mk([SHARED + [11]]), prefix_cache=False)
+    assert off.cache_lookups == off.cached_tokens == 0 and off.cache_hit_rate == 0.0

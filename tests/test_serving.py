@@ -63,11 +63,27 @@ def test_engine_packed_weights_close_to_fakequant():
 
 
 def test_engine_kv_quant_close_to_bf16():
-    eng, _, _ = _engine()
-    base = eng.generate([[1, 2, 3, 4, 5, 6, 7, 8]])
+    """The 4.5-bit KV path tracks the bf16 engine within the quantization
+    envelope.  Since the prefix-caching PR, kv_quant prefill attends the
+    quantize-dequantized wire bytes (``tf.prefill(qdq_kv=True)``) -- the same
+    values decode reads and the property that makes cached-prefix serving
+    bit-identical -- so exact token-for-token equality with the bf16 engine
+    is no longer guaranteed on a near-tied random-init model; logits closeness
+    and greedy determinism are the stable contract."""
+    cfg = get_config("llama3_2_3b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray([[1, 2, 3, 4, 5, 6, 7, 8]])
+    lens = jnp.asarray([8], jnp.int32)
+    base, _, _ = tf.prefill(params, toks, cfg, max_len=64, last_positions=lens)
+    qdq, _, _ = tf.prefill(params, toks, cfg, max_len=64, last_positions=lens,
+                           qdq_kv=True)
+    b, q = np.asarray(base, np.float32)[0], np.asarray(qdq, np.float32)[0]
+    assert np.linalg.norm(q - b) / np.linalg.norm(b) < 0.25  # ~4.5-bit envelope
+    assert np.corrcoef(b, q)[0, 1] > 0.95
     engq, _, _ = _engine(kv_quant=True)
     outq = engq.generate([[1, 2, 3, 4, 5, 6, 7, 8]])
-    assert base[0][:10] == outq[0][:10]  # 4.5-bit KV: greedy path preserved
+    assert outq == engq.generate([[1, 2, 3, 4, 5, 6, 7, 8]])  # deterministic
+    assert outq[0][:8] == [1, 2, 3, 4, 5, 6, 7, 8] and len(outq[0]) == 16
 
 
 def test_pack_model_weights_structure():
