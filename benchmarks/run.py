@@ -46,6 +46,7 @@ def main(argv=None) -> None:
         ("appC1_kv", kv_quant.appC1_kv_quant),
         ("serving_throughput", serving_bench.serving_throughput),
         ("serving_prefix_cache", serving_bench.serving_prefix_cache),
+        ("serving_disagg", serving_bench.serving_disagg),
         ("roofline", roofline.roofline_rows),
     ]
     slow = {"table3_ppl", "table4_accuracy", "table6", "appC1_kv"}

@@ -28,6 +28,14 @@ N-token system prompt to every request to demo the hit rate:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
         --continuous --requests 12 --shared-prefix 32 --slots 4
+
+Disaggregated serving (docs/serving.md#disaggregated-serving): ``--disagg``
+replaces the single serve loop with prefill/decode replicas and a
+prefix-aware router; quantized KV pages ship between stages in the 4.5-bit
+wire format (0.28x of bf16):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
+        --disagg --prefill-replicas 2 --decode-replicas 2 --requests 12 --rate 20
 """
 from __future__ import annotations
 
@@ -69,6 +77,17 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many identical system-prompt tokens to every "
                          "request (demo traffic for the prefix cache)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated prefill/decode serving (implies a request "
+                         "stream like --continuous; docs/serving.md#disaggregated-serving)")
+    ap.add_argument("--prefill-replicas", type=int, default=1,
+                    help="prefill workers, each with its own pool + prefix cache (--disagg)")
+    ap.add_argument("--decode-replicas", type=int, default=1,
+                    help="decode workers, each with its own pool + slots (--disagg)")
+    ap.add_argument("--chunk-tokens", type=int, default=64,
+                    help="max prompt tokens per prefill chunk (--disagg queue fairness)")
+    ap.add_argument("--transfer-gbps", type=float, default=0.0,
+                    help="modelled prefill->decode wire bandwidth (0 = instantaneous)")
     ap.add_argument("--ckpt", default=None, help="restore params from a training checkpoint dir")
     args = ap.parse_args(argv)
 
@@ -121,7 +140,7 @@ def main(argv=None):
         extras["enc_frames"] = jnp.asarray(
             rng.standard_normal((len(reqs), cfg.enc_frames, cfg.d_model)), jnp.bfloat16)
 
-    if args.continuous:
+    if args.continuous or args.disagg:
         from repro.serving.scheduler import Request, SchedulerConfig
 
         # Poisson arrival trace: exponential inter-arrival gaps at --rate req/s
@@ -131,6 +150,29 @@ def main(argv=None):
         stream = [Request(rid=i, prompt=p, max_new_tokens=args.max_new,
                           arrival=float(arrivals[i]))
                   for i, p in enumerate(reqs)]
+        if args.disagg:
+            from repro.serving.disagg import serve_disagg
+
+            rep = serve_disagg(
+                eng, stream, n_prefill=args.prefill_replicas,
+                n_decode=args.decode_replicas, chunk_tokens=args.chunk_tokens,
+                max_slots=args.slots, prefix_cache=args.prefix_cache,
+                transfer_gbps=args.transfer_gbps)
+            print(f"{rep.new_tokens} tokens / {rep.wall_time:.2f}s makespan | "
+                  f"{rep.n_prefill}P x {rep.n_decode}D | "
+                  f"prefill {rep.prefill_tokens_per_s:.1f} tok/s, "
+                  f"decode {rep.decode_tokens_per_s:.1f} tok/s")
+            print(f"  mean TTFT {rep.mean_ttft * 1e3:.1f} ms | mean latency "
+                  f"{rep.mean_latency * 1e3:.1f} ms | {rep.shipments} shipments, "
+                  f"{rep.transfer_bytes / 1024:.1f} KiB shipped "
+                  f"({rep.transfer_ratio:.3f}x of bf16)")
+            print(f"  router: {rep.router_placements} placements, "
+                  f"{rep.router_hit_rate:.0%} predicted hit rate | realized "
+                  f"{rep.cache_hit_rate:.0%} ({rep.cached_tokens} cached vs "
+                  f"{rep.prefill_tokens} computed prompt tokens)")
+            for r in rep.requests[:3]:
+                print(f"  prompt[{len(r.prompt)}] @t={r.arrival:.2f}s -> {r.out_tokens}")
+            return
         rep = eng.serve(stream, sched_cfg=SchedulerConfig(
             max_slots=args.slots, prefill_token_budget=args.prefill_budget),
             prefix_cache=args.prefix_cache)

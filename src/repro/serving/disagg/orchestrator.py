@@ -1,0 +1,225 @@
+"""Deterministic single-process orchestrator for disaggregated serving.
+
+``serve_disagg`` runs N prefill replicas and M decode replicas as a
+discrete-event simulation: every worker carries a **virtual clock**, the
+orchestrator repeatedly picks the earliest runnable event (a request
+arriving at the router, a prefill chunk, a decode insert+step), executes
+that worker's real compute on the real device, and advances the worker's
+clock by the MEASURED wall duration.  Two consequences:
+
+* **Determinism where it matters**: greedy outputs are bit-identical to
+  single-engine ``Engine.serve`` regardless of event timing jitter -- each
+  sequence's logits depend only on its own wire-format pages and tokens,
+  never on batch composition or replica placement -- and the event order
+  itself is deterministic on ties (route < prefill < decode, then wid).
+* **Honest parallel timing without threads**: replica clocks overlap the
+  way real disaggregated workers would (a decode replica's clock keeps
+  ticking only on ITS OWN work), so ``DisaggReport.decode_tokens_per_s``
+  measures the decode stage's intrinsic rate -- the number that holds
+  steady under a prefill burst which would crater a co-resident
+  single-engine loop -- while ``wall_time`` is the simulated makespan.
+
+Shipment hand-off models the wire: a completed prefill's ``PageShipment``
+becomes insertable on its decode replica at
+``completion + nbytes * 8 / (transfer_gbps * 1e9)`` (instantaneous by
+default).  Shipping RaZeR wire pages costs 4.5/16 of bf16 KV -- the
+``transfer_ratio`` the report asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from ..engine import ServeReport
+from ..pagepool import PagePoolConfig
+from .router import Placement, Router
+from .workers import DecodeWorker, PrefillWorker
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """Disaggregated-serving knobs (see docs/serving.md#disaggregated-serving).
+
+    ``prefill_pages`` / ``decode_pages`` size each replica's pool (pages per
+    replica; default: ``max_slots`` worst-case sequences, like single-engine
+    ``serve``).  ``transfer_gbps`` models the prefill->decode wire (0 =
+    hand-off is instantaneous)."""
+
+    n_prefill: int = 1
+    n_decode: int = 1
+    chunk_tokens: int = 64
+    max_slots: int = 8
+    page_size: int = 16
+    prefill_pages: Optional[int] = None
+    decode_pages: Optional[int] = None
+    prefix_cache: bool = True
+    transfer_gbps: float = 0.0
+
+
+@dataclasses.dataclass
+class DisaggReport(ServeReport):
+    """``ServeReport`` (same fields, same meanings -- ``wall_time`` is the
+    simulated makespan) plus disaggregation extras.
+
+    ``peak_pages`` / ``peak_slots`` sum per-replica peaks (each replica's
+    peak may occur at a different virtual time); ``prefill_busy`` /
+    ``decode_busy`` accumulate measured compute seconds per stage across
+    replicas, so the per-stage rates divide work by time the stage actually
+    spent working -- not by makespan."""
+
+    n_prefill: int = 1
+    n_decode: int = 1
+    shipments: int = 0
+    transfer_bytes: int = 0
+    transfer_bf16_bytes: int = 0
+    router_placements: int = 0
+    router_predicted_hit_tokens: int = 0
+    router_prompt_tokens: int = 0
+    prefill_busy: float = 0.0
+    decode_busy: float = 0.0
+
+    @property
+    def router_hit_rate(self) -> float:
+        """Fraction of prompt tokens the router's replica views predicted
+        cached (compare ``cache_hit_rate`` for what admission realized)."""
+        if not self.router_prompt_tokens:
+            return 0.0
+        return self.router_predicted_hit_tokens / self.router_prompt_tokens
+
+    @property
+    def transfer_ratio(self) -> float:
+        """Shipped bytes / bf16 bytes for the same pages: 4.5/16 = 0.28125."""
+        if not self.transfer_bf16_bytes:
+            return 0.0
+        return self.transfer_bytes / self.transfer_bf16_bytes
+
+    @property
+    def prefill_tokens_per_s(self) -> float:
+        """Computed prompt tokens per prefill-stage busy second."""
+        return self.prefill_tokens / max(self.prefill_busy, 1e-9)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        """Generated tokens per decode-stage busy second -- the stage's
+        intrinsic rate, independent of prefill load by construction."""
+        return self.new_tokens / max(self.decode_busy, 1e-9)
+
+
+def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
+                 max_new_tokens: Optional[int] = None,
+                 **knobs) -> DisaggReport:
+    """Serve a request trace on a disaggregated prefill/decode fleet.
+
+    ``engine`` is a regular ``serving.Engine`` (its params + jitted prefill /
+    decode functions are shared by every replica; each replica owns only its
+    pool).  ``requests`` is anything ``Engine.serve`` accepts: raw token-id
+    prompts or ``scheduler.Request`` with arrivals.  Knobs come from ``cfg``
+    or keyword overrides (``n_prefill=2, chunk_tokens=32, ...`` -- see
+    ``DisaggConfig``).  Greedy outputs are bit-identical to single-engine
+    ``Engine.serve`` on the same trace.
+
+    Flow per request: router places it (longest prefix-view hit, then least
+    load) -> prefill replica chunk-prefills (<= ``chunk_tokens`` per event,
+    reusing its radix cache) and samples the first token -> pages ship in
+    wire format (4.5 bits/elem) -> decode replica's insert stage scatters
+    them into free pages and seats a slot -> dynamic-batch decode steps to
+    eos / ``max_new_tokens``."""
+    cfg = dataclasses.replace(cfg or DisaggConfig(), **knobs)
+    n_new = max_new_tokens or engine.scfg.max_new_tokens
+    reqs = engine._as_requests(requests, n_new)
+
+    pps = -(-engine.scfg.max_len // cfg.page_size)
+    mk_pool = lambda pages: PagePoolConfig(
+        num_pages=pages, page_size=cfg.page_size, max_len=engine.scfg.max_len)
+    p_pool = mk_pool(cfg.prefill_pages or cfg.max_slots * pps)
+    d_pool = mk_pool(cfg.decode_pages or cfg.max_slots * pps)
+
+    router = Router(cfg.n_prefill, cfg.n_decode, cfg.page_size)
+    pws = [PrefillWorker(i, engine, p_pool, chunk_tokens=cfg.chunk_tokens,
+                         prefix_cache=cfg.prefix_cache,
+                         listener=router.listener(i) if cfg.prefix_cache else None)
+           for i in range(cfg.n_prefill)]
+    dws = [DecodeWorker(i, engine, d_pool, max_slots=cfg.max_slots)
+           for i in range(cfg.n_decode)]
+
+    # arrival order (FIFO on ties, like the single-engine scheduler)
+    waiting = sorted(reqs, key=lambda r: (r.arrival, r.rid))
+    dest: Dict[int, Placement] = {}
+    transfer_s = (lambda ship: ship.nbytes * 8 / (cfg.transfer_gbps * 1e9)) \
+        if cfg.transfer_gbps > 0 else (lambda ship: 0.0)
+
+    while waiting or any(w.has_work for w in pws) or any(d.has_work for d in dws):
+        # earliest runnable event; priority breaks ties (route, then prefill
+        # by wid, then decode by wid) so the interleave is deterministic
+        events = []
+        if waiting:
+            events.append((waiting[0].arrival, 0, "route", None))
+        for w in pws:
+            if w.has_work:
+                events.append((max(w.t, w.next_ready()), 1 + w.wid, "prefill", w))
+        for d in dws:
+            if d.running:
+                events.append((d.t, 1 + cfg.n_prefill + d.wid, "decode", d))
+            elif d.pending:
+                events.append((max(d.t, d.next_ready()),
+                               1 + cfg.n_prefill + d.wid, "decode", d))
+        t, _, kind, worker = min(events, key=lambda e: e[:2])
+
+        if kind == "route":
+            req = waiting.pop(0)
+            placement = router.place(req.prompt)
+            router.assign(placement, len(req.prompt))
+            dest[req.rid] = placement
+            pws[placement.prefill].submit(req, ready_at=req.arrival)
+            continue
+
+        worker.t = t
+        t0 = time.perf_counter()
+        if kind == "prefill":
+            done = worker.step(worker.t)
+            dur = time.perf_counter() - t0
+            worker.t += dur
+            worker.busy += dur
+            if done is not None:
+                req, shipment, first = done
+                req.first_token_time = worker.t  # sampled as the chunk lands
+                placement = dest[req.rid]
+                router.prefill_done(placement, len(req.prompt))
+                dws[placement.decode].enqueue(
+                    req, shipment, first, ready_at=worker.t + transfer_s(shipment))
+        else:
+            retired = worker.insert(worker.t)
+            retired += worker.step(worker.t)
+            dur = time.perf_counter() - t0
+            worker.t += dur
+            worker.busy += dur
+            for req in retired:
+                req.finish_time = worker.t  # tokens land as the step completes
+                router.retire(dest[req.rid])
+
+    wall = max([w.t for w in pws] + [d.t for d in dws], default=0.0)
+    return DisaggReport(
+        requests=reqs, wall_time=wall,
+        new_tokens=sum(len(r.out_tokens) for r in reqs),
+        decode_steps=sum(d.decode_steps for d in dws),
+        prefill_tokens=sum(w.prefill_tokens for w in pws),
+        peak_pages=sum(w.peak_pages for w in pws) + sum(d.peak_pages for d in dws),
+        peak_slots=sum(d.peak_slots for d in dws),
+        page_bytes=dws[0].pool.bytes_per_page(),
+        pool_bytes=sum(w.pool.total_bytes() for w in pws)
+        + sum(d.pool.total_bytes() for d in dws),
+        cached_tokens=sum(w.cached_tokens for w in pws),
+        cache_lookups=sum(w.cache.lookups for w in pws if w.cache),
+        cache_hits=sum(w.cache.hits for w in pws if w.cache),
+        cache_evictions=sum(w.cache.evictions for w in pws if w.cache),
+        n_prefill=cfg.n_prefill, n_decode=cfg.n_decode,
+        shipments=sum(d.shipments for d in dws),
+        transfer_bytes=sum(d.imported_bytes for d in dws),
+        transfer_bf16_bytes=sum(d.imported_bf16_bytes for d in dws),
+        router_placements=router.placements,
+        router_predicted_hit_tokens=router.predicted_hit_tokens,
+        router_prompt_tokens=router.prompt_tokens,
+        prefill_busy=sum(w.busy for w in pws),
+        decode_busy=sum(d.busy for d in dws),
+    )

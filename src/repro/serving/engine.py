@@ -328,21 +328,32 @@ class Engine:
         return self._bucketed_prefill(toks, np.asarray([s], np.int32),
                                       max_len=toks.shape[1], qdq_kv=True)
 
-    def _serve_prefill_suffix(self, req, pool):
-        """Prefill only the uncached suffix of a prefix-cache hit: suffix
-        tokens (bucketed) attend the sequence's cached pages -- gathered and
-        dequantized per layer -- plus themselves, and the first output token
-        is sampled from the last suffix position's logits.  The gathered
-        prefix is bucketed to a power-of-two PAGE count (one compile per
-        (suffix, prefix) bucket pair), not the full page-table width: per-
-        layer dequant of untouched pages would otherwise dominate the very
-        prefill work the cache saves.  Returns (last_logits, suffix caches to
-        scatter at ``start=cached_tokens``)."""
-        c, s = req.cached_tokens, len(req.prompt) - req.cached_tokens
+    def _prefill_range(self, prompt, start: int, end: int, pool, rid: int):
+        """Prefill tokens ``[start, end)`` of ``prompt`` against the
+        sequence's pool pages covering ``[0, start)`` -- the shared primitive
+        behind BOTH prefix-cache suffix continuation (``start`` = the cached
+        length, ``end`` = the prompt length) and disagg chunked prefill
+        (successive ``[done, done + chunk)`` windows; every chunk past the
+        first attends the pages earlier chunks just wrote).
+
+        ``start == 0`` is the plain bucketed prefill.  Otherwise the range
+        tokens (bucketed) attend the sequence's written pages -- gathered and
+        dequantized per layer -- plus themselves.  The gathered prefix is
+        bucketed to a power-of-two PAGE count (one compile per
+        (range, prefix) bucket pair), not the full page-table width: per-layer
+        dequant of untouched pages would otherwise dominate the very prefill
+        work caching/chunking saves.  Returns (last logits of position
+        ``end - 1``, K/V caches to scatter with
+        ``write_prefill(..., length=end, start=start)``); both are
+        bit-identical to a single full prefill's at any split points
+        (docs/serving.md#why-hits-are-bit-identical)."""
+        if start == 0:
+            return self._serve_prefill(prompt[:end])
+        c, s = start, end - start
         ps = pool.pool_cfg.page_size
         npb = min(1 << (-(-c // ps) - 1).bit_length(), pool.pool_cfg.pages_per_seq)
         toks = np.zeros((1, self._bucket(s)), np.int32)
-        toks[0, :s] = req.prompt[c:]
+        toks[0, :s] = prompt[c:end]
         if self._suffix_jit is None:
             def _suffix(params, tokens, pool_caches, row, pre_len, sfx_len, *, page_size):
                 with sharding_ctx(self.mesh):
@@ -353,9 +364,29 @@ class Engine:
             self._suffix_jit = jax.jit(_suffix, static_argnames=("page_size",))
         return self._suffix_jit(
             self.params, jnp.asarray(toks), pool.caches,
-            jnp.asarray(pool.page_row(req.rid)[:npb]),
+            jnp.asarray(pool.page_row(rid)[:npb]),
             jnp.asarray(c, jnp.int32), jnp.asarray(s, jnp.int32),
             page_size=ps)
+
+    def _as_requests(self, requests, n_new: int):
+        """Normalize a request stream (``scheduler.Request`` or raw token-id
+        prompts, freely mixed) into a list of ``Request``.  Raw prompts get
+        arrival 0, the engine's eos, and fresh rids past any explicit
+        Request's (rids key page-pool ownership; duplicates are rejected
+        downstream).  Shared by ``serve`` and ``disagg.serve_disagg``."""
+        from repro.serving.scheduler import Request
+
+        requests = list(requests)  # may be a generator; iterated twice below
+        next_rid = max((r.rid for r in requests if isinstance(r, Request)), default=-1) + 1
+        reqs: List[Request] = []
+        for r in requests:
+            if isinstance(r, Request):
+                reqs.append(r)
+            else:
+                reqs.append(Request(rid=next_rid, prompt=list(r), max_new_tokens=n_new,
+                                    eos_id=self.scfg.eos_id))
+                next_rid += 1
+        return reqs
 
     def serve(self, requests, *, sched_cfg=None, pool_cfg=None,
               max_new_tokens: Optional[int] = None, prefix_cache: bool = True):
@@ -385,18 +416,7 @@ class Engine:
 
         sched_cfg = sched_cfg or SchedulerConfig()
         n_new = max_new_tokens or self.scfg.max_new_tokens
-        requests = list(requests)  # may be a generator; iterated twice below
-        # raw prompts get fresh rids past any explicit Request's (rids key
-        # page-pool ownership; the scheduler rejects duplicates)
-        next_rid = max((r.rid for r in requests if isinstance(r, Request)), default=-1) + 1
-        reqs: List[Request] = []
-        for r in requests:
-            if isinstance(r, Request):
-                reqs.append(r)
-            else:
-                reqs.append(Request(rid=next_rid, prompt=list(r), max_new_tokens=n_new,
-                                    eos_id=self.scfg.eos_id))
-                next_rid += 1
+        reqs = self._as_requests(requests, n_new)
         if pool_cfg is None:
             ps = 16
             pages_per_seq = -(-self.scfg.max_len // ps)
@@ -440,10 +460,22 @@ class Engine:
             # prefill phase (token-budgeted by the scheduler; a prefix-cache
             # hit prefills only the uncached suffix and scatter-writes just
             # the pages past the shared boundary)
+            by_rid = {r.rid: r for r in admitted}
             for req in admitted:
+                if req.dedup_of is not None:
+                    # same-batch duplicate: its donor (earlier in this very
+                    # list) has prefilled and sampled, so the shared pages are
+                    # written and the COW copy of the partial last page can be
+                    # taken; the first token is the donor's -- identical
+                    # prompts sample identical greedy tokens
+                    pool.flush_forks(req.rid)
+                    cached_tokens += req.cached_tokens
+                    sched.start(req, by_rid[req.dedup_of].out_tokens[0], now())
+                    continue
                 if req.cached_tokens:
                     pool.flush_forks(req.rid)  # COW copy, after donors' writes
-                    last, caches = self._serve_prefill_suffix(req, pool)
+                    last, caches = self._prefill_range(
+                        req.prompt, req.cached_tokens, len(req.prompt), pool, req.rid)
                     pool.write_prefill(req.rid, caches, len(req.prompt),
                                        start=req.cached_tokens)
                 else:
@@ -498,9 +530,12 @@ class ServeReport:
     peak_slots: int
     page_bytes: int
     pool_bytes: int
-    # prefix-cache outcome: ``prefill_tokens`` counts only COMPUTED prompt
+    # page-sharing outcome: ``prefill_tokens`` counts only COMPUTED prompt
     # tokens; ``cached_tokens`` counts prompt tokens served from shared /
-    # copied pages instead (all zero with the cache off)
+    # copied pages instead -- prefix-cache hits AND same-batch duplicate
+    # dedup (scheduler._admit_dedup), so it can be nonzero with the cache
+    # off.  Every field defaults to a real zero: with ``prefix_cache=False``
+    # the cache_* stats are populated zeros, never stale Nones
     cached_tokens: int = 0
     cache_lookups: int = 0
     cache_hits: int = 0

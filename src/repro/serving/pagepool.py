@@ -51,6 +51,14 @@ def _copy_page(pool, src, dst):
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_pages(pool, src, dst):
+    """Write shipped page bytes (one layer group's ``(count, n, ps, kvh, X)``
+    buffers) into physical pages ``dst`` of a donated pool -- the device half
+    of ``KVPagePool.import_pages``."""
+    return {key: buf.at[:, dst].set(src[key]) for key, buf in pool.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def _quantize_scatter(pool, k, v, pids, sids):
     """Quantize a prefill's K/V (count, S, kvh, hd) and scatter token j into
     pool page ``pids[j]`` slot ``sids[j]`` -- one compiled call per prefill
@@ -93,6 +101,46 @@ class PagePoolConfig:
     def pages_per_seq(self) -> int:
         """Page-table width: worst-case pages one sequence can touch."""
         return -(-self.max_len // self.page_size)
+
+
+@dataclasses.dataclass
+class PageShipment:
+    """Wire-format KV pages of one sequence, on host, ready to cross a
+    process/host boundary (serving/disagg).
+
+    ``buffers`` mirrors the pool's per-layer-group cache list: one
+    ``{"k_codes": (count, n_pages, ps, kvh, hd//2) u8, "k_meta": ..., ...}``
+    dict per scan group, gathered in LOGICAL page order -- entry ``i`` along
+    the page axis holds tokens ``[i * ps, (i+1) * ps)``.  The payload IS the
+    App. C.1 wire format, so shipping KV between replicas costs 4.5 bits per
+    element (``nbytes``) instead of 16 (``bf16_bytes``) -- the 3.56x transfer
+    saving that makes prefill/decode disaggregation cheap.  ``n_tokens``
+    counts the valid leading positions (the tail of the last page is
+    uninitialized wire bytes the importer's decode overwrites/masks).
+    """
+
+    seq_id: int
+    n_tokens: int
+    page_size: int
+    buffers: List[Dict[str, np.ndarray]]
+
+    @property
+    def n_pages(self) -> int:
+        return self.buffers[0]["k_codes"].shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Transfer payload: wire-format bytes actually shipped."""
+        return sum(int(a.nbytes) for g in self.buffers for a in g.values())
+
+    @property
+    def bf16_bytes(self) -> int:
+        """What the same KV pages would cost in bf16 (2 bytes/element)."""
+        hd = self.buffers[0]["k_codes"].shape[-1] * 2
+        return sum(
+            int(np.prod(g["k_codes"].shape[:-1])) * hd * 2 * 2  # K+V, 2 B each
+            for g in self.buffers
+        )
 
 
 def _check_paged_arch(cfg: ArchConfig) -> None:
@@ -354,6 +402,92 @@ class KVPagePool:
         for gi, c in enumerate(self.caches):
             self.caches[gi] = _quantize_scatter(
                 c, caches[gi]["k"][:, 0], caches[gi]["v"][:, 0], pids, sids)
+
+    # -- wire-format page transfer (serving/disagg) --------------------------
+    def export_pages(self, seq_id: Optional[int] = None, *,
+                     page_ids: Optional[Sequence[int]] = None,
+                     n_tokens: Optional[int] = None) -> PageShipment:
+        """Gather a sequence's pages (or an explicit logical-order ``page_ids``
+        list) to host as a ``PageShipment``.
+
+        A prefill replica calls this after the last prefill chunk lands: the
+        shipment holds exactly the bytes its pool pages do, so a decode
+        replica that ``import_pages`` it attends bit-identical KV.  Pending
+        copy-on-write forks for the sequence are flushed first -- a shipment
+        must capture the sequence's OWN last-page bytes, not its donor's
+        still-shared source page.  ``n_tokens`` bounds the export to the pages
+        covering that many leading tokens (default: every page the sequence
+        holds, valid to its full page span)."""
+        if (seq_id is None) == (page_ids is None):
+            raise ValueError("export_pages: pass exactly one of seq_id / page_ids")
+        if seq_id is not None:
+            self.flush_forks(seq_id)
+            pages = self._seq_pages.get(seq_id)
+            if pages is None:
+                raise ValueError(
+                    f"export_pages() for unknown sequence {seq_id}: it holds no "
+                    f"pages (never allocated, or already released)"
+                )
+            if n_tokens is None:
+                n_tokens = len(pages) * self.pool_cfg.page_size
+            pages = pages[: self.pages_for(n_tokens)]
+        else:
+            pages = list(page_ids)
+            if n_tokens is None:
+                n_tokens = len(pages) * self.pool_cfg.page_size
+            if self.pages_for(n_tokens) != len(pages):
+                raise ValueError(
+                    f"export_pages: {len(pages)} pages cannot cover n_tokens="
+                    f"{n_tokens} (need {self.pages_for(n_tokens)} at page_size "
+                    f"{self.pool_cfg.page_size})"
+                )
+        ids = jnp.asarray(np.asarray(pages, np.int32))
+        buffers = [
+            {key: np.asarray(jax.device_get(buf[:, ids])) for key, buf in c.items()}
+            for c in self.caches
+        ]
+        return PageShipment(seq_id=seq_id if seq_id is not None else -1,
+                            n_tokens=int(n_tokens),
+                            page_size=self.pool_cfg.page_size, buffers=buffers)
+
+    def import_pages(self, shipment: PageShipment, *, seq_id: Optional[int] = None,
+                     reserve_tokens: Optional[int] = None) -> List[int]:
+        """Inject a shipment into THIS pool: allocate fresh pages for the
+        sequence and write the shipped wire bytes into the leading ones.
+
+        ``reserve_tokens`` (default ``shipment.n_tokens``) sizes the
+        allocation -- a decode replica reserves the worst case
+        ``len(prompt) + max_new_tokens`` up front, exactly like single-engine
+        admission, so decode never deadlocks on pool growth.  Returns the
+        sequence's new page list (logical order); the shipment's page ``i``
+        bytes now live in physical page ``pages[i]`` and ``page_table`` /
+        ``paged_kv_attention`` work unchanged."""
+        sid = shipment.seq_id if seq_id is None else seq_id
+        n_tok = shipment.n_tokens if reserve_tokens is None else reserve_tokens
+        if shipment.page_size != self.pool_cfg.page_size:
+            raise ValueError(
+                f"shipment page_size {shipment.page_size} != pool page_size "
+                f"{self.pool_cfg.page_size}; replicas must agree on the page layout"
+            )
+        if len(shipment.buffers) != len(self.caches) or any(
+            s[k].shape[0] != c[k].shape[0] or s[k].shape[2:] != c[k].shape[2:]
+            for s, c in zip(shipment.buffers, self.caches) for k in c
+        ):
+            raise ValueError(
+                "shipment layer-group/head layout does not match this pool "
+                "(different arch?)"
+            )
+        if n_tok < shipment.n_tokens:
+            raise ValueError(
+                f"reserve_tokens={n_tok} < shipment.n_tokens={shipment.n_tokens}: "
+                f"the reservation must cover every shipped page"
+            )
+        pages = self.allocate(sid, n_tok)
+        dst = jnp.asarray(np.asarray(pages[: shipment.n_pages], np.int32))
+        for gi, host in enumerate(shipment.buffers):
+            src = {k: jnp.asarray(v) for k, v in host.items()}
+            self.caches[gi] = _scatter_pages(self.caches[gi], src, dst)
+        return pages
 
     # -- debug / tests -------------------------------------------------------
     def gather_sequence(self, seq_id: int, length: int, group: int = 0):

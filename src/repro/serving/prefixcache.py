@@ -37,12 +37,28 @@ match) through its full prefix path.  Pinned nodes are prefix-closed: a
 sequence that shares a chunk shares every chunk before it, so a refcount-1
 subtree is always fully reclaimable and ``evictable_pages`` can count nodes
 without walking structure.
+
+Eviction candidates come off a **lazy-deletion min-heap** keyed on
+``last_used``: every LRU bump pushes a fresh ``(last_used, tiebreak, node)``
+entry and stale entries (an older timestamp, or an already-evicted node) are
+discarded as they surface, so ``evict`` pops candidates in LRU order in
+O(log n) per pop instead of the old O(nodes) scan per victim.  Entries that
+surface pinned (live readers, protected, or still-interior) are stashed and
+re-pushed after the pass; the heap is compacted when stale entries outnumber
+live nodes 4:1.
+
+An optional ``listener`` receives ``("insert", path)`` / ``("evict", path)``
+events (``path`` = the node's root-to-node tuple of token chunks).  The
+disagg router (serving/disagg/router.py) subscribes per-replica views to
+these events so request placement can rank replicas by radix hit length
+without peeking at -- or LRU-perturbing -- replica-local trees.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .pagepool import KVPagePool
 
@@ -82,16 +98,51 @@ class PrefixMatch:
 class PrefixCache:
     """Radix-indexed, refcounted, LRU-evicted prefix cache over a page pool."""
 
-    def __init__(self, pool: KVPagePool):
+    def __init__(self, pool: KVPagePool,
+                 listener: Optional[Callable[[str, Tuple[Tuple[int, ...], ...]], None]] = None):
         self.pool = pool
         self.page_size = pool.pool_cfg.page_size
         self.root = RadixNode(chunk=(), page=-1, parent=None)
         self._clock = itertools.count(1)
+        self.listener = listener
+        # lazy-deletion LRU heap: (last_used, tiebreak, node); an entry is
+        # live iff its timestamp still equals the node's last_used and the
+        # node is still in the tree (parent set)
+        self._heap: List[Tuple[int, int, RadixNode]] = []
+        self._live_nodes = 0
         # stats (ServeReport surfaces these)
         self.lookups = 0
         self.hits = 0
         self.hit_tokens = 0
         self.evictions = 0
+
+    # -- LRU heap ------------------------------------------------------------
+    def _bump(self, node: RadixNode) -> None:
+        """Advance a node's LRU clock and push the fresh heap entry (the old
+        entry goes stale; it is skipped when it surfaces)."""
+        node.last_used = t = next(self._clock)
+        heapq.heappush(self._heap, (t, t, node))
+        if len(self._heap) > 64 and len(self._heap) > 4 * max(self._live_nodes, 1):
+            self._compact()
+
+    def _compact(self) -> None:
+        """Drop stale entries (bumped-since or evicted nodes), keeping one
+        live entry per node."""
+        seen, out = set(), []
+        for t, tb, n in self._heap:
+            if n.parent is not None and t == n.last_used and id(n) not in seen:
+                seen.add(id(n))
+                out.append((t, tb, n))
+        self._heap = out
+        heapq.heapify(self._heap)
+
+    def _path(self, node: RadixNode) -> Tuple[Tuple[int, ...], ...]:
+        """Root-to-node chunk path (the listener-event address of a node)."""
+        chunks: List[Tuple[int, ...]] = []
+        while node.parent is not None:
+            chunks.append(node.chunk)
+            node = node.parent
+        return tuple(reversed(chunks))
 
     # -- introspection -------------------------------------------------------
     def _nodes(self) -> List[RadixNode]:
@@ -134,7 +185,7 @@ class PrefixCache:
             child = node.children.get(tuple(prompt[depth * ps: (depth + 1) * ps]))
             if child is None:
                 break
-            child.last_used = next(self._clock)
+            self._bump(child)
             pages.append(child.page)
             node = child
             depth += 1
@@ -151,7 +202,7 @@ class PrefixCache:
                     cow_page, partial = child.page, m
                     best = child
             if partial:
-                best.last_used = next(self._clock)
+                self._bump(best)
         return PrefixMatch(pages=tuple(pages), cow_page=cow_page, partial=partial,
                            _full_tokens=depth * ps)
 
@@ -187,31 +238,54 @@ class PrefixCache:
                 child = RadixNode(chunk=chunk, page=seq_pages[i], parent=node)
                 node.children[chunk] = child
                 self.pool.incref(seq_pages[i])
+                self._live_nodes += 1
                 new += 1
-            child.last_used = next(self._clock)
+            self._bump(child)
             node = child
+        if self.listener is not None and len(prompt) >= ps:
+            # full published path, new chunks or not: the router view insert
+            # is idempotent, and re-announcing keeps it self-healing
+            self.listener("insert", self._path(node))
         return new
 
     # -- eviction ------------------------------------------------------------
     def evict(self, n_pages: int, protect: Sequence[int] = ()) -> int:
         """Free up to ``n_pages`` pool pages by evicting least-recently-used
         refcount-1 leaves (cascading to exposed parents).  ``protect`` pins
-        pages a pending admission is about to share.  Returns pages freed."""
+        pages a pending admission is about to share.  Returns pages freed.
+
+        Victims pop off the LRU heap (lazy deletion, see module doc) in
+        timestamp order.  A popped node that is currently pinned -- protected,
+        still read by a live sequence, or interior -- is stashed and re-pushed
+        after the pass (it may be evictable on a later call); an interior node
+        whose last child is evicted DURING the pass is re-pushed immediately,
+        which is what keeps the leaf-first cascade working within one call
+        (parents carry OLDER timestamps than their children, so the exposed
+        parent is the next pop)."""
         protect = set(protect)
         freed = 0
-        while freed < n_pages:
-            victim = None
-            for node in self._nodes():
-                if node.children or node.page in protect:
-                    continue
-                if self.pool.refcount(node.page) != 1:
-                    continue  # a live sequence still reads it
-                if victim is None or node.last_used < victim.last_used:
-                    victim = node
-            if victim is None:
-                break
-            del victim.parent.children[victim.chunk]
-            self.pool.decref(victim.page)  # last owner -> page freed
+        stash: List[Tuple[int, int, RadixNode]] = []
+        while freed < n_pages and self._heap:
+            entry = heapq.heappop(self._heap)
+            t, _, node = entry
+            if node.parent is None or t != node.last_used:
+                continue  # stale: evicted already, or bumped (fresher entry exists)
+            if node.children or node.page in protect or self.pool.refcount(node.page) != 1:
+                stash.append(entry)
+                continue
+            parent = node.parent
+            if self.listener is not None:
+                self.listener("evict", self._path(node))
+            del parent.children[node.chunk]
+            node.parent = None  # marks every remaining heap entry for it stale
+            self.pool.decref(node.page)  # last owner -> page freed
+            self._live_nodes -= 1
             self.evictions += 1
             freed += 1
+            if parent is not self.root and not parent.children:
+                # cascade: the newly exposed parent was stashed (or popped
+                # long ago); give it a live entry so this pass can reach it
+                heapq.heappush(self._heap, (parent.last_used, next(self._clock), parent))
+        for entry in stash:
+            heapq.heappush(self._heap, entry)
         return freed

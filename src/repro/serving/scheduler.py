@@ -59,6 +59,10 @@ class Request:
     # prefix-cache outcome: leading prompt tokens whose KV came from shared /
     # copied pool pages instead of being recomputed (0 = cache off or miss)
     cached_tokens: int = 0
+    # same-batch dedup: rid of an identical-prompt request admitted earlier in
+    # the SAME admit() batch whose pages (and greedy first token) this request
+    # joins outright -- the engine skips its prefill entirely
+    dedup_of: Optional[int] = None
 
     @property
     def cur_len(self) -> int:
@@ -173,13 +177,28 @@ class Scheduler:
         and a page shortfall evicts LRU unreferenced cached pages before
         giving up.  If the pool cannot host the request WITH its match (the
         matched pages themselves are pinned against eviction), admission
-        retries matchless rather than stalling on a full-but-idle pool."""
+        retries matchless rather than stalling on a full-but-idle pool.
+
+        Identical prompts within one admit() batch DEDUP (cache on or off):
+        the second copy joins the first's pages through the shared-allocation
+        path (full pages shared outright, the partial last page forked
+        copy-on-write for its own decode writes), charges nothing against the
+        prefill token budget, and is marked ``dedup_of`` so the engine skips
+        its prefill and copies the donor's greedy first token -- identical
+        prompts sample identical first tokens, so outputs are unchanged."""
         admitted: List[Request] = []
+        batch_prompts: Dict[tuple, Request] = {}
         budget = self.cfg.prefill_token_budget
         while self.waiting and self._free_slots:
             req = self.waiting[0]
             if req.arrival > now:
                 break
+            donor = batch_prompts.get(tuple(req.prompt))
+            if donor is not None:
+                if not self._admit_dedup(req, donor, now):
+                    break  # maximal sharing still does not fit: wait for pages
+                admitted.append(req)
+                continue
             match = self.cache.match(req.prompt) if self.cache is not None else None
             cached = match.cached_len if match is not None else 0
             if len(req.prompt) - cached > budget and admitted:
@@ -209,9 +228,39 @@ class Scheduler:
             req.prefill_start = now
             budget -= len(req.prompt) - cached
             admitted.append(req)
+            batch_prompts[tuple(req.prompt)] = req
             if budget <= 0:
                 break
         return admitted
+
+    def _admit_dedup(self, req: Request, donor: Request, now: float) -> bool:
+        """Admit ``req`` as a same-batch duplicate of ``donor``: share every
+        fully-covered prompt page, fork the partial last page copy-on-write
+        (its tail receives this request's own decode writes; the copy is
+        flushed after the donor's prefill lands), reserve only the remaining
+        worst-case decode pages.  No prefill-budget charge -- nothing is
+        recomputed."""
+        from .prefixcache import PrefixMatch
+
+        ps = self.pool.pool_cfg.page_size
+        full, partial = len(req.prompt) // ps, len(req.prompt) % ps
+        donor_pages = self.pool.sequence_pages(donor.rid)
+        match = PrefixMatch(
+            pages=tuple(donor_pages[:full]),
+            cow_page=donor_pages[full] if partial else None,
+            partial=partial, _full_tokens=full * ps)
+        if not self._reserve(req, match):
+            return False
+        self.waiting.pop(0)
+        self.pool.allocate(req.rid, len(req.prompt) + req.max_new_tokens,
+                           shared=match.pages, cow_src=match.cow_page)
+        if self.cache is not None:
+            self.cache.record(match)  # a dedup is the strongest possible hit
+        req.cached_tokens = len(req.prompt)
+        req.dedup_of = donor.rid
+        req.slot = self._free_slots.pop()
+        req.prefill_start = now
+        return True
 
     def start(self, req: Request, first_token: int, now: float) -> None:
         """Prefill finished: record the first sampled token and either retire

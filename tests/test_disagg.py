@@ -1,0 +1,345 @@
+"""Disaggregated-serving subsystem tests: wire-format page shipment
+round-trips, router placement over replica radix views, the prefill/decode
+worker split, and the acceptance criterion -- greedy outputs from
+``serve_disagg`` bit-identical to single-engine ``Engine.serve`` on mixed
+traces (shared-prefix, duplicate, and packed-MoE workloads included)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.serving.disagg import (DisaggReport, PrefillWorker, RadixView,
+                                  Router, serve_disagg)
+from repro.serving.engine import Engine, ServeConfig, ServeReport
+from repro.serving.pagepool import KVPagePool, PagePoolConfig, PageShipment
+from repro.serving.prefixcache import PrefixCache
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+
+def _cfg(arch="llama3_2_3b"):
+    return get_config(arch).reduced()
+
+
+def _engine(arch="llama3_2_3b", **kw):
+    cfg = _cfg(arch)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("max_new_tokens", 6)
+    kw.setdefault("kv_quant", True)
+    return Engine(params, cfg, ServeConfig(**kw)), cfg
+
+
+def _pool(num_pages=16, ps=4, max_len=64, arch="llama3_2_3b"):
+    return KVPagePool(_cfg(arch), PagePoolConfig(num_pages=num_pages, page_size=ps,
+                                                 max_len=max_len))
+
+
+def _fill_random(pool, pages, seed):
+    """Write random wire bytes into the given physical pages of every cache
+    buffer -- shipment transfer is byte transport, so tests need no model."""
+    rng = np.random.default_rng(seed)
+    ids = jnp.asarray(np.asarray(pages, np.int32))
+    for gi, c in enumerate(pool.caches):
+        pool.caches[gi] = {
+            k: buf.at[:, ids].set(
+                jnp.asarray(rng.integers(0, 256, size=(buf.shape[0], len(pages))
+                                         + buf.shape[2:], dtype=np.uint8)))
+            for k, buf in c.items()
+        }
+
+
+def _page_bytes(pool, pages):
+    ids = jnp.asarray(np.asarray(pages, np.int32))
+    return [{k: np.asarray(jax.device_get(buf[:, ids])) for k, buf in c.items()}
+            for c in pool.caches]
+
+
+# ---------------------------------------------------------------------------
+# page shipment round-trips
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,ps", [
+    ("llama3_2_3b", 16),
+    ("llama3_2_3b", 4),    # sub-quant-block page size (hd//16 blocks per token)
+    ("dbrx_132b", 8),      # packed-MoE arch: different layer-group structure
+])
+def test_shipment_roundtrip_bit_exact(arch, ps):
+    """export -> import across pools lands the exact wire bytes in the
+    importer's (different) physical pages, for full and partial last pages."""
+    src = _pool(num_pages=16, ps=ps, arch=arch)
+    dst = _pool(num_pages=16, ps=ps, arch=arch)
+    dst.allocate(99, 3 * ps + 1)  # occupy pages so physical ids differ
+    n_tok = 2 * ps + ps // 2  # partial last page
+    pages = src.allocate(0, n_tok)
+    _fill_random(src, pages, seed=1)
+    want = _page_bytes(src, pages)
+
+    ship = src.export_pages(0)
+    assert ship.n_pages == len(pages) and ship.n_tokens == len(pages) * ps
+    new_pages = dst.import_pages(ship, seq_id=7)
+    assert new_pages != pages or dst is src  # physically relocated
+    got = _page_bytes(dst, new_pages)
+    for w, g in zip(want, got):
+        for k in w:
+            np.testing.assert_array_equal(w[k], g[k])
+
+
+def test_shipment_roundtrip_mid_cow_fork():
+    """Exporting a sequence with a PENDING copy-on-write fork flushes it
+    first: the shipment carries the sequence's OWN forked last-page bytes,
+    not its donor's shared source page."""
+    pool = _pool(num_pages=16, ps=4)
+    donor = pool.allocate(0, 10)  # 3 pages, last partial
+    _fill_random(pool, donor, seed=2)
+    forked = pool.allocate(1, 10, shared=donor[:2], cow_src=donor[2])
+    assert pool.refcount(donor[2]) >= 2  # fork deferred: still reading donor's
+    ship = pool.export_pages(1)  # must flush the fork before gathering
+    donor_bytes = _page_bytes(pool, [donor[2]])
+    own_bytes = _page_bytes(pool, [pool.sequence_pages(1)[2]])
+    for d, o in zip(donor_bytes, own_bytes):
+        for k in d:
+            np.testing.assert_array_equal(d[k], o[k])  # copied, then diverges
+    # the shipment is the sequence's own pages, importable elsewhere
+    dst = _pool(num_pages=16, ps=4)
+    got = _page_bytes(dst, dst.import_pages(ship, seq_id=0))
+    want = _page_bytes(pool, pool.sequence_pages(1))
+    for w, g in zip(want, got):
+        for k in w:
+            np.testing.assert_array_equal(w[k], g[k])
+
+
+def test_shipment_reserve_and_validation_errors():
+    pool = _pool(num_pages=16, ps=4)
+    pool.allocate(0, 8)
+    with pytest.raises(ValueError, match="exactly one"):
+        pool.export_pages(0, page_ids=[1])
+    with pytest.raises(ValueError, match="unknown sequence"):
+        pool.export_pages(3)
+    ship = pool.export_pages(0)
+    dst = _pool(num_pages=16, ps=8)  # mismatched page size
+    with pytest.raises(ValueError, match="page_size"):
+        dst.import_pages(ship, seq_id=0)
+    dst2 = _pool(num_pages=16, ps=4)
+    with pytest.raises(ValueError, match="reserve"):
+        dst2.import_pages(ship, seq_id=0, reserve_tokens=4)
+    # worst-case decode reservation: extra pages beyond the shipped ones
+    pages = dst2.import_pages(ship, seq_id=0, reserve_tokens=17)
+    assert len(pages) == 5 and ship.n_pages == 2
+    # transfer cost is the 4.5-bit wire format: 4.5/16 of bf16 exactly
+    assert ship.nbytes / ship.bf16_bytes == pytest.approx(4.5 / 16)
+    ship.buffers[0]["k_codes"] = ship.buffers[0]["k_codes"][:, :, :, :1]  # drop heads
+    with pytest.raises(ValueError, match="arch"):
+        _pool(num_pages=16, ps=4).import_pages(ship, seq_id=1)
+
+
+# ---------------------------------------------------------------------------
+# router: radix views + placement policy
+# ---------------------------------------------------------------------------
+def _chunks(tokens, ps=4):
+    return tuple(tuple(tokens[i:i + ps]) for i in range(0, len(tokens), ps))
+
+
+def test_router_longest_hit_wins():
+    r = Router(n_prefill=3, n_decode=1, page_size=4)
+    r.listener(0)("insert", _chunks([1, 2, 3, 4]))
+    r.listener(2)("insert", _chunks([1, 2, 3, 4, 5, 6, 7, 8]))
+    # replica 2 holds two chunks of the prompt, replica 0 one: 2 wins even
+    # though 0 has less load
+    r.prefill_load[0] = 0
+    r.prefill_load[2] = 100
+    p = r.place([1, 2, 3, 4, 5, 6, 7, 8, 9])
+    assert p.prefill == 2 and p.predicted_hit == 8
+    # partial-chunk tail counts, clamped to len(prompt) - 1
+    p = r.place([1, 2, 3, 4, 5, 6])
+    assert p.prefill == 2 and p.predicted_hit == 5
+
+
+def test_router_load_tiebreak_and_assign():
+    r = Router(n_prefill=3, n_decode=2, page_size=4)
+    prompt = [9, 9, 9, 9, 9]
+    first = r.place(prompt)  # all-miss: least loaded, lowest wid
+    assert first.prefill == 0 and first.decode == 0
+    r.assign(first, len(prompt))
+    assert r.prefill_load[0] == 5 and r.decode_load[0] == 1
+    second = r.place(prompt)  # replica 0 now loaded: next wid wins the tie
+    assert second.prefill == 1 and second.decode == 1
+    r.assign(second, len(prompt))
+    r.prefill_done(first, len(prompt))
+    r.retire(first)
+    assert r.prefill_load[0] == 0 and r.decode_load[0] == 0
+    assert r.place(prompt).prefill == 0  # unloaded replica attracts again
+    assert r.placements == 2 and r.prompt_tokens == 10
+
+
+def test_router_eviction_invalidates_view():
+    """An evict event removes the replica view's leaf, so placement stops
+    predicting a hit there -- wired through a REAL PrefixCache listener."""
+    pool = _pool(num_pages=8, ps=4)
+    r = Router(n_prefill=1, n_decode=1, page_size=4)
+    cache = PrefixCache(pool, listener=r.listener(0))
+    prompt = [1, 2, 3, 4, 5, 6, 7, 8]
+    pages = pool.allocate(0, len(prompt))
+    cache.insert(prompt, pages)
+    pool.release(0)
+    assert r.views[0].match_len(prompt + [9]) == 8
+    cache.evict(1)  # LRU leaf: the second chunk
+    assert r.views[0].match_len(prompt + [9]) == 4
+    cache.evict(1)
+    assert r.views[0].match_len(prompt + [9]) == 0
+    assert r.views[0].n_chunks == 0
+
+
+def test_radix_view_remove_keeps_interior_nodes():
+    v = RadixView(page_size=4)
+    v.insert(_chunks([1, 2, 3, 4, 5, 6, 7, 8]))
+    v.remove(_chunks([1, 2, 3, 4]))  # interior: child would be orphaned
+    assert v.match_len([1, 2, 3, 4, 5, 6, 7, 8, 9]) == 8
+    v.remove(_chunks([9, 9, 9, 9]))  # unknown path: no-op
+    v.remove(_chunks([1, 2, 3, 4, 5, 6, 7, 8]))  # leaf: removed
+    assert v.match_len([1, 2, 3, 4, 5, 6, 7, 8, 9]) == 4
+
+
+# ---------------------------------------------------------------------------
+# same-batch duplicate dedup (satellite)
+# ---------------------------------------------------------------------------
+def test_scheduler_dedups_identical_same_batch_prompts():
+    """The second identical prompt in one admit() joins the first's pages
+    (full pages shared, partial last page COW-forked) with no prefill-budget
+    charge, cache on or off."""
+    for cache_on in (False, True):
+        pool = _pool(num_pages=32, ps=4)
+        cache = PrefixCache(pool) if cache_on else None
+        sched = Scheduler(SchedulerConfig(max_slots=4, prefill_token_budget=16),
+                          pool, cache=cache)
+        prompt = [5, 6, 7, 8, 9, 10]  # 1.5 pages
+        for rid in range(3):
+            sched.submit(Request(rid=rid, prompt=list(prompt), max_new_tokens=4))
+        admitted = sched.admit(0.0)
+        assert [r.dedup_of for r in admitted] == [None, 0, 0]
+        assert [r.cached_tokens for r in admitted] == [0, 6, 6]
+        a, b = pool.sequence_pages(0), pool.sequence_pages(1)
+        assert b[0] == a[0] and b[1] != a[1]  # full page shared, last forked
+        assert pool.refcount(a[0]) >= 3
+        # dedup charged nothing: a 16-token budget admitted 18 prompt tokens
+
+
+def test_serve_dedup_bit_identical_and_skips_prefill():
+    eng, cfg = _engine()
+    rng = np.random.default_rng(3)
+    base = rng.integers(1, cfg.vocab_size, size=9).tolist()
+    prompts = [list(base), rng.integers(1, cfg.vocab_size, size=5).tolist(),
+               list(base), list(base)]
+    want = eng.generate([list(p) for p in prompts], max_new_tokens=4)
+    for cache_on in (False, True):
+        rep = eng.serve([list(p) for p in prompts], max_new_tokens=4,
+                        prefix_cache=cache_on)
+        assert rep.outputs == want
+        dedup = [r for r in rep.requests if r.dedup_of is not None]
+        assert len(dedup) == 2 and all(r.cached_tokens == 9 for r in dedup)
+        # duplicates were never prefilled
+        assert rep.prefill_tokens == 9 + 5
+
+
+def test_serve_report_zeroed_cache_stats_with_cache_off():
+    """Satellite: ``prefix_cache=False`` leaves real zeros (never Nones) in
+    the cache stats, and dedup'd tokens still count as cached_tokens."""
+    eng, cfg = _engine()
+    p = [3, 1, 4, 1, 5]
+    rep = eng.serve([list(p), [2, 7]], max_new_tokens=2, prefix_cache=False)
+    assert (rep.cache_lookups, rep.cache_hits, rep.cache_evictions) == (0, 0, 0)
+    assert rep.cached_tokens == 0 and rep.cache_hit_rate == 0.0
+    assert rep.mean_ttft > 0 and rep.mean_latency > 0
+    rep = eng.serve([list(p), list(p)], max_new_tokens=2, prefix_cache=False)
+    assert rep.cached_tokens == len(p) and rep.cache_lookups == 0
+
+
+# ---------------------------------------------------------------------------
+# serve_disagg: end-to-end bit-exactness + report
+# ---------------------------------------------------------------------------
+def _mixed_trace(cfg, rng, n=6, shared=True):
+    head = rng.integers(1, cfg.vocab_size, size=8).tolist()
+    prompts = []
+    for i in range(n):
+        tail = rng.integers(1, cfg.vocab_size, size=int(rng.integers(2, 7))).tolist()
+        prompts.append((head + tail) if shared and i % 2 else tail)
+    prompts.append(list(prompts[0]))  # a duplicate rides the trace
+    arr = np.cumsum(rng.exponential(0.002, size=len(prompts)))
+    return [Request(rid=i, prompt=list(p), max_new_tokens=4, arrival=float(arr[i]))
+            for i, p in enumerate(prompts)]
+
+
+def test_serve_disagg_bit_identical_to_single_engine():
+    eng, cfg = _engine()
+    rng = np.random.default_rng(0)
+    reqs = _mixed_trace(cfg, rng)
+    single = eng.serve([Request(rid=r.rid, prompt=list(r.prompt),
+                                max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+                        for r in reqs])
+    rep = serve_disagg(eng, reqs, n_prefill=2, n_decode=2, chunk_tokens=8,
+                       page_size=8)
+    assert rep.outputs == single.outputs
+    assert rep.shipments == len(reqs)
+    assert rep.transfer_bytes / rep.transfer_bf16_bytes == pytest.approx(4.5 / 16)
+    assert rep.decode_steps > 0 and rep.new_tokens == single.new_tokens
+    assert rep.mean_ttft > 0 and rep.wall_time > 0
+    assert rep.prefill_busy > 0 and rep.decode_busy > 0
+
+
+def test_serve_disagg_chunked_prefill_any_chunk_size():
+    """Chunk size must not change outputs: chained suffix prefills are
+    bit-identical to one full prefill at every split point."""
+    eng, cfg = _engine()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n).tolist()
+               for n in (19, 7, 26)]
+    want = eng.generate([list(p) for p in prompts], max_new_tokens=4)
+    for chunk in (5, 16):
+        rep = serve_disagg(eng, [list(p) for p in prompts], max_new_tokens=4,
+                           chunk_tokens=chunk, page_size=8)
+        assert rep.outputs == want, f"chunk_tokens={chunk} changed outputs"
+
+
+def test_serve_disagg_packed_moe():
+    eng, cfg = _engine("dbrx_132b", max_len=32, max_new_tokens=4)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).tolist()
+               for n in (9, 5, 12)]
+    single = eng.serve([list(p) for p in prompts], max_new_tokens=3)
+    rep = serve_disagg(eng, [list(p) for p in prompts], max_new_tokens=3,
+                       n_prefill=2, n_decode=1, chunk_tokens=4, page_size=4)
+    assert rep.outputs == single.outputs
+
+
+def test_serve_disagg_cache_off_and_report_shape():
+    eng, cfg = _engine()
+    rng = np.random.default_rng(4)
+    reqs = _mixed_trace(cfg, rng, n=4)
+    single = eng.serve([Request(rid=r.rid, prompt=list(r.prompt),
+                                max_new_tokens=r.max_new_tokens, arrival=r.arrival)
+                        for r in reqs], prefix_cache=False)
+    rep = serve_disagg(eng, reqs, prefix_cache=False, page_size=8)
+    assert rep.outputs == single.outputs
+    # DisaggReport IS a ServeReport: shared fields, not duplicated ones
+    assert isinstance(rep, ServeReport) and isinstance(rep, DisaggReport)
+    assert set(f.name for f in __import__("dataclasses").fields(ServeReport)) <= \
+        set(f.name for f in __import__("dataclasses").fields(DisaggReport))
+    assert (rep.cache_lookups, rep.cache_hits, rep.cache_evictions) == (0, 0, 0)
+    assert rep.router_hit_rate == 0.0  # no views without caches
+    assert rep.n_prefill == 1 and rep.n_decode == 1
+
+
+def test_prefill_worker_reuses_replica_cache():
+    """Back-to-back shared-prefix jobs on ONE prefill replica: the second
+    prefills only its suffix (the replica's radix cache served the head)."""
+    eng, cfg = _engine()
+    rng = np.random.default_rng(5)
+    head = rng.integers(1, cfg.vocab_size, size=16).tolist()
+    a = head + rng.integers(1, cfg.vocab_size, size=4).tolist()
+    b = head + rng.integers(1, cfg.vocab_size, size=6).tolist()
+    rep = serve_disagg(eng, [a, b], max_new_tokens=2, n_prefill=1, n_decode=1,
+                       chunk_tokens=32, page_size=8)
+    assert rep.cached_tokens == 16 and rep.cache_hits == 1
+    assert rep.prefill_tokens == len(a) + len(b) - 16
+    want = eng.generate([list(a), list(b)], max_new_tokens=2)
+    assert rep.outputs == want

@@ -170,9 +170,10 @@ def test_scheduler_slots_and_fifo():
 
 
 def test_scheduler_token_budget_and_arrivals():
+    # distinct prompts: identical ones would dedup (free) instead of queueing
     sched = _mk_sched(max_slots=4, budget=10)
     sched.submit(Request(rid=0, prompt=[1] * 6, max_new_tokens=2))
-    sched.submit(Request(rid=1, prompt=[1] * 6, max_new_tokens=2))
+    sched.submit(Request(rid=1, prompt=[2] * 6, max_new_tokens=2))
     sched.submit(Request(rid=2, prompt=[1] * 2, max_new_tokens=2, arrival=5.0))
     admitted = sched.admit(0.0)
     assert [r.rid for r in admitted] == [0]  # 6 + 6 > budget 10
@@ -197,7 +198,7 @@ def test_scheduler_pool_backpressure():
     """Admission waits for pages, not just slots: worst-case reservation."""
     sched = _mk_sched(max_slots=4, num_pages=3, ps=8, max_len=48)
     sched.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=6))  # 2 pages
-    sched.submit(Request(rid=1, prompt=[1] * 10, max_new_tokens=6))  # 2 pages > 1 free
+    sched.submit(Request(rid=1, prompt=[2] * 10, max_new_tokens=6))  # 2 pages > 1 free
     admitted = sched.admit(0.0)
     assert [r.rid for r in admitted] == [0]
     sched.start(admitted[0], 7, 0.0)
