@@ -194,6 +194,77 @@ def serving_prefix_cache():
     return rows
 
 
+def serving_speculative():
+    """Self-speculative draft-k-verify-1 decode vs vanilla, same engine.
+
+    The target serves under fakequant razer (runtime QDQ per forward -- the
+    deployment numerics whose per-step cost speculation amortizes); the draft
+    is the SAME checkpoint at plain bf16, i.e. the PR-1 policy registry used
+    as a speed knob rather than an accuracy knob.  Greedy outputs are
+    asserted bit-identical across all rows (speculation is pure scheduling);
+    the acceptance criterion is decode tok/s improvement at an EMPIRICAL
+    accept rate >= ~0.6, with the accept rate and draft overhead (fraction of
+    decode wall spent drafting) reported per row.  A same-policy draft row
+    gives the accept=1.0 upper bound of the k chosen."""
+    from repro.core.policy import QuantPolicy
+
+    cfg = get_config("llama3_2_3b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    max_len, slots, ps, k = 64, 4, 16, 2
+    n_req, max_new = (5, 6) if common.DRY else (10, 12)
+    eng = Engine(params, cfg, ServeConfig(max_len=max_len, max_new_tokens=max_new,
+                                          quant=QuantPolicy.fakequant("razer"),
+                                          kv_quant=True))
+    rng = np.random.default_rng(0)
+    # equal decode lengths: every slot decodes the full max_new, so the
+    # accept-rate average is taken over full-depth speculation windows
+    reqs = [(rng.integers(1, 256, size=int(rng.integers(3, 15))).tolist(), max_new)
+            for _ in range(n_req)]
+
+    pages_per_seq = -(-max_len // ps)
+    pool_cfg = PagePoolConfig(num_pages=slots * pages_per_seq, page_size=ps,
+                              max_len=max_len)
+    sched_cfg = SchedulerConfig(max_slots=slots)
+
+    def trace(arrivals):
+        return [Request(rid=i, prompt=list(p), max_new_tokens=n,
+                        arrival=float(arrivals[i])) for i, (p, n) in enumerate(reqs)]
+
+    def run(**kw):
+        return eng.serve(trace(arrivals), sched_cfg=sched_cfg, pool_cfg=pool_cfg, **kw)
+
+    # warm every jit (prefill buckets, 1-token decode, draft decode, k+1
+    # verify) -- compile time is not a scheduling property
+    arrivals = np.zeros(n_req)
+    run()
+    hot = run()
+    run(speculate_k=k, draft_policy="bf16")
+    run(speculate_k=k, draft_policy=eng.scfg.quant)
+
+    # Poisson arrivals at ~2 requests per hot decode step: loaded system,
+    # machine-relative pacing (same idiom as the other serving benches)
+    step_s = hot.wall_time / max(hot.decode_steps, 1)
+    arrivals = np.cumsum(rng.exponential(step_s * 0.5, size=n_req))
+
+    base = run()
+    spec = run(speculate_k=k, draft_policy="bf16")
+    upper = run(speculate_k=k, draft_policy=eng.scfg.quant)
+    assert spec.outputs == base.outputs, "speculation must not change greedy outputs"
+    assert upper.outputs == base.outputs
+    assert upper.accept_rate == 1.0, upper.accept_rate
+
+    def row(name, rep):
+        return (f"serving_spec/{name}", round(rep.wall_time * 1e6, 1),
+                f"tok_s={rep.tokens_per_s:.2f} "
+                f"speedup={rep.tokens_per_s / base.tokens_per_s:.2f}x "
+                f"decode_steps={rep.decode_steps} tok_per_step={rep.tokens_per_step:.2f} "
+                f"accept_rate={rep.accept_rate:.2f} draft_overhead={rep.draft_overhead:.2f} "
+                f"drafted={rep.drafted_tokens} k={rep.speculate_k}")
+
+    return [row("vanilla", base), row(f"k{k}_bf16_draft", spec),
+            row(f"k{k}_same_policy", upper)]
+
+
 def serving_disagg():
     """Disaggregated prefill/decode under a prefill burst, vs the single loop.
 

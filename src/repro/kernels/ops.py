@@ -36,6 +36,7 @@ __all__ = [
     "razer_act_qdq",
     "razer_kv_attention",
     "razer_paged_kv_attention",
+    "razer_paged_kv_attention_verify",
     "quantized_matmul",
     "quantized_grouped_matmul",
     "quantized_act_qdq",
@@ -239,3 +240,30 @@ def razer_paged_kv_attention(q, cache, page_table, cur_len, *,
             interpret=bool(interpret) if interpret is not None else not on_tpu())
     out = out.astype(q.dtype)
     return out[:, None] if squeeze else out
+
+
+def razer_paged_kv_attention_verify(q, cache, page_table, cur_len, *,
+                                    force_pallas: bool = False,
+                                    interpret: bool | None = None):
+    """Multi-query VERIFY attention over the paged pool (speculative decode).
+
+    q: (B, T, H, hd) -- T = speculate_k + 1 queries per slot, query t at
+    logical position ``cur_len[b] + t`` attending positions
+    ``< cur_len[b] + t + 1``.  Unlike ``razer_paged_kv_attention``,
+    ``cur_len`` here is the COMMITTED length BEFORE the T speculative
+    positions (the per-query "+t+1" happens inside); the T positions' own
+    wire bytes must already be scattered into the pages.  Returns
+    (B, T, H, hd)."""
+    from .paged_kv_attention import paged_kv_attention_verify_pallas
+
+    assert q.ndim == 4, f"verify attention wants (B, T, H, hd) queries, got {q.shape}"
+    if not (force_pallas or on_tpu()):
+        out = ref.paged_kv_attention_verify_ref(
+            q, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"],
+            page_table, cur_len)
+    else:
+        out = paged_kv_attention_verify_pallas(
+            q, cache["k_codes"], cache["k_meta"], cache["v_codes"], cache["v_meta"],
+            jnp.asarray(page_table, jnp.int32), jnp.asarray(cur_len, jnp.int32),
+            interpret=bool(interpret) if interpret is not None else not on_tpu())
+    return out.astype(q.dtype)

@@ -30,7 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .razer_kv_attention import _dequant_tile
 
-__all__ = ["paged_kv_attention_pallas"]
+__all__ = ["paged_kv_attention_pallas", "paged_kv_attention_verify_pallas"]
 
 
 def _kernel(pt_ref, cur_len_ref, q_ref, kc_ref, km_ref, vc_ref, vm_ref, o_ref,
@@ -124,3 +124,104 @@ def paged_kv_attention_pallas(q, k_codes, k_meta, v_codes, v_meta, page_table,
         qg, kc, km, vc, vm,
     )
     return out.reshape(b, h, hd)
+
+
+def _verify_kernel(pt_ref, cur_len_ref, q_ref, kc_ref, km_ref, vc_ref, vm_ref,
+                   o_ref, m_ref, l_ref, acc_ref, *, ps, hd, npages, t, g):
+    """q-length>1 variant for speculative verify: the T queries of slot b sit
+    at logical positions ``cur_len[b] + t``, so the mask is per QUERY ROW --
+    query t sees positions < cur_len + t + 1 (its own just-written KV
+    included).  Identical page loop / online softmax otherwise."""
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    cur_len = cur_len_ref[pl.program_id(0)]
+    q = q_ref[...].reshape(t * g, hd).astype(jnp.float32)  # (T*G, hd)
+    k = _dequant_tile(kc_ref[...], km_ref[...], hd)  # (ps, hd) f32
+    v = _dequant_tile(vc_ref[...], vm_ref[...], hd)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (T*G, ps)
+    pos = pi * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+    # row r of the flattened (T*G) query block belongs to query index r // g
+    qt = jax.lax.broadcasted_iota(jnp.int32, (t * g, 1), 0) // g
+    s = jnp.where(pos < cur_len + qt + 1, s, -1e30)
+
+    m_prev = m_ref[...]  # (T*G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(pi == npages - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).reshape(
+            t, g, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_kv_attention_verify_pallas(q, k_codes, k_meta, v_codes, v_meta,
+                                     page_table, cur_len, *,
+                                     interpret: bool = False):
+    """q: (B, T, H, hd) -- T = k+1 verify queries per slot at positions
+    ``cur_len[b] + t``; pool / page_table as the single-query kernel;
+    ``cur_len`` (B,) i32 is the COMMITTED length before the T positions.
+
+    Returns (B, T, H, hd) f32."""
+    b, t, h, hd = q.shape
+    p_pages, ps, kvh, half = k_codes.shape
+    npages = page_table.shape[1]
+    assert half * 2 == hd and h % kvh == 0 and page_table.shape[0] == b
+    g = h // kvh
+    grid = (b, kvh, npages)
+
+    # (B, T, H, hd) -> (B, KVH, T, G, hd): one (T, G, hd) query block per
+    # (slot, kv head) grid step, flattened to (T*G, hd) rows in the kernel
+    qg = q.reshape(b, t, kvh, g, hd).transpose(0, 2, 1, 3, 4)
+    kc = k_codes.transpose(0, 2, 1, 3)
+    km = k_meta.transpose(0, 2, 1, 3)
+    vc = v_codes.transpose(0, 2, 1, 3)
+    vm = v_meta.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_verify_kernel, ps=ps, hd=hd, npages=npages, t=t, g=g)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # page_table, cur_len
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((None, None, t, g, hd),
+                             lambda bi, ki, pi, pt, cl: (bi, ki, 0, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 2),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 16),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 2),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+                pl.BlockSpec((None, None, ps, hd // 16),
+                             lambda bi, ki, pi, pt, cl: (pt[bi, pi], ki, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((None, None, t, g, hd),
+                                   lambda bi, ki, pi, pt, cl: (bi, ki, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((t * g, 1), jnp.float32),
+                pltpu.VMEM((t * g, 1), jnp.float32),
+                pltpu.VMEM((t * g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, t, g, hd), jnp.float32),
+        interpret=interpret,
+    )(
+        jnp.asarray(page_table, jnp.int32),
+        jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,)),
+        qg, kc, km, vc, vm,
+    )
+    # (B, KVH, T, G, hd) -> (B, T, H, hd)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, t, h, hd)

@@ -12,6 +12,7 @@ __all__ = [
     "razer_act_qdq_ref",
     "razer_kv_attention_ref",
     "paged_kv_attention_ref",
+    "paged_kv_attention_verify_ref",
 ]
 
 
@@ -73,3 +74,38 @@ def paged_kv_attention_ref(q, k_codes, k_meta, v_codes, v_meta, page_table, cur_
     return razer_kv_attention_ref(
         q, view(k_codes), view(k_meta), view(v_codes), view(v_meta), cur_len
     )
+
+
+def paged_kv_attention_verify_ref(q, k_codes, k_meta, v_codes, v_meta,
+                                  page_table, cur_len):
+    """Oracle for the q-length>1 VERIFY kernel (speculative decode).
+
+    q: (B, T, H, hd) -- the T queries of sequence b sit at logical positions
+    ``cur_len[b] + t``; query t attends positions ``< cur_len[b] + t + 1``
+    (its own just-written KV included), the per-query causal mask of a
+    draft-k-verify-1 step.
+
+    Each (b, t) query folds into the batch dim of the single-query oracle
+    with its own valid length, so every verify query computes EXACTLY the
+    reduction a vanilla one-token decode step at that position would -- the
+    arithmetic backbone of speculative decode's bit-identical-greedy claim.
+    """
+    from repro.models.attention import decode_attention
+    from repro.serving.kvcache import kv_dequantize
+
+    b, t, h, hd = q.shape
+    _, ps, kvh, _ = k_codes.shape
+    npages = page_table.shape[1]
+
+    def view(pool):  # (P, ps, kvh, x) -> (B, NP*ps, kvh, x)
+        g = pool[page_table]
+        return g.reshape(b, npages * ps, kvh, pool.shape[-1])
+
+    k = kv_dequantize(view(k_codes), view(k_meta), hd)  # (B, S, kvh, hd) f32
+    v = kv_dequantize(view(v_codes), view(v_meta), hd)
+    kb = jnp.repeat(k, t, axis=0)  # (B*T, S, kvh, hd): row b*T+i is seq b
+    vb = jnp.repeat(v, t, axis=0)
+    cur = (jnp.asarray(cur_len, jnp.int32).reshape(-1)[:, None]
+           + jnp.arange(t, dtype=jnp.int32)[None, :] + 1).reshape(-1)
+    out = decode_attention(q.reshape(b * t, 1, h, hd).astype(jnp.float32), kb, vb, cur)
+    return out.reshape(b, t, h, hd)

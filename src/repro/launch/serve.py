@@ -29,6 +29,15 @@ N-token system prompt to every request to demo the hit rate:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
         --continuous --requests 12 --shared-prefix 32 --slots 4
 
+Speculative decoding (docs/serving.md#speculative-decoding): ``--speculate-k``
+drafts k tokens per slot per iteration with the same checkpoint under a
+cheaper quantization (``--draft-policy``), verifies all k+1 positions in one
+multi-query paged-attention pass, and rolls rejected drafts back -- greedy
+outputs stay bit-identical at any k, only throughput changes:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_3b --reduced \
+        --continuous --requests 12 --slots 4 --speculate-k 3 --draft-policy bf16
+
 Disaggregated serving (docs/serving.md#disaggregated-serving): ``--disagg``
 replaces the single serve loop with prefill/decode replicas and a
 prefix-aware router; quantized KV pages ship between stages in the 4.5-bit
@@ -77,6 +86,15 @@ def main(argv=None):
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many identical system-prompt tokens to every "
                          "request (demo traffic for the prefix cache)")
+    ap.add_argument("--speculate-k", type=int, default=0,
+                    help="self-speculative decoding: draft this many tokens per slot "
+                         "per iteration with the --draft-policy model, verify all k+1 "
+                         "in one paged-attention pass (continuous mode; greedy outputs "
+                         "stay bit-identical -- docs/serving.md#speculative-decoding)")
+    ap.add_argument("--draft-policy", default=None,
+                    help="draft-side quantization: a registry format name (nvfp4, "
+                         "fouroversix, ...) fake-quantizing the SAME checkpoint, or "
+                         "'bf16' for the raw weights (default: nvfp4)")
     ap.add_argument("--disagg", action="store_true",
                     help="disaggregated prefill/decode serving (implies a request "
                          "stream like --continuous; docs/serving.md#disaggregated-serving)")
@@ -151,6 +169,9 @@ def main(argv=None):
                           arrival=float(arrivals[i]))
                   for i, p in enumerate(reqs)]
         if args.disagg:
+            if args.speculate_k:
+                ap.error("--speculate-k applies to single-engine --continuous "
+                         "serving; disaggregated decode workers do not speculate yet")
             from repro.serving.disagg import serve_disagg
 
             rep = serve_disagg(
@@ -175,10 +196,16 @@ def main(argv=None):
             return
         rep = eng.serve(stream, sched_cfg=SchedulerConfig(
             max_slots=args.slots, prefill_token_budget=args.prefill_budget),
-            prefix_cache=args.prefix_cache)
+            prefix_cache=args.prefix_cache,
+            speculate_k=args.speculate_k, draft_policy=args.draft_policy)
         print(f"{rep.new_tokens} tokens / {rep.wall_time:.2f}s = "
               f"{rep.tokens_per_s:.1f} tok/s over {rep.decode_steps} decode steps "
               f"(slots={args.slots}, packed={args.packed})")
+        if rep.speculate_k:
+            print(f"  speculative k={rep.speculate_k}: accept rate "
+                  f"{rep.accept_rate:.0%} ({rep.accepted_drafts}/{rep.drafted_tokens} "
+                  f"drafts) | {rep.tokens_per_step:.2f} tokens/step | draft overhead "
+                  f"{rep.draft_overhead:.0%} of decode time")
         print(f"  mean TTFT {rep.mean_ttft * 1e3:.1f} ms | mean latency "
               f"{rep.mean_latency * 1e3:.1f} ms | peak {rep.peak_slots} slots, "
               f"{rep.peak_pages} pages ({rep.peak_pages * rep.page_bytes / 1024:.1f} KiB KV)")

@@ -332,6 +332,49 @@ def gqa_decode(x, p, cfg: ArchConfig, cache, cur_len, *, quant: QuantLike = DEFA
     return y, cache
 
 
+def gqa_decode_verify(x, p, cfg: ArchConfig, cache, cur_len, *,
+                      quant: QuantLike = DEFAULT_QUANT, pages=None):
+    """Multi-token VERIFY decode over the paged pool (speculative decoding):
+    ``x`` (B, T, d) carries T = speculate_k + 1 tokens per slot -- the last
+    committed token plus the k drafts -- at logical positions
+    ``cur_len[b] + t``.  All T tokens' K/V quantize and scatter into their
+    page slots FIRST (overwriting whatever the draft pass wrote there), then
+    ONE multi-query paged-attention call masks each query t to positions
+    ``< cur_len + t + 1`` -- per query, exactly the write-then-attend order
+    and reduction a vanilla one-token decode step performs, which is what
+    keeps greedy verify outputs bit-identical to vanilla decode.  Idle slots
+    (cur_len 0, all-null page row) scatter to the null page as usual.
+    Returns (y (B, T, d), cache)."""
+    from repro.kernels import ops as kops
+    from repro.serving.kvcache import kv_quantize
+
+    if pages is None:
+        raise ValueError("gqa_decode_verify is a paged-pool path: pages is required")
+    b, t, _ = x.shape
+    cl = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(-1), (b,))
+    positions = cl[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]  # (B, T)
+    q, k, v = _qkv(x, p, cfg, quant, positions)
+    kc, km = kv_quantize(k)  # (B, T, kvh, hd//2|hd//16)
+    vc, vm = kv_quantize(v)
+    ps = cache["k_codes"].shape[1]
+    # position cur_len + t lives in page (cur_len + t) // ps, slot % ps; the
+    # logical index clips to the table width like write_prefill -- real slots
+    # stay in range by the scheduler's len+max_new+k reservation, idle slots'
+    # all-null rows land on the null page regardless
+    pid = pages[jnp.arange(b)[:, None],
+                jnp.minimum(positions // ps, pages.shape[1] - 1)]  # (B, T)
+    slot = positions % ps
+    cache = {
+        "k_codes": cache["k_codes"].at[pid, slot].set(kc),
+        "k_meta": cache["k_meta"].at[pid, slot].set(km),
+        "v_codes": cache["v_codes"].at[pid, slot].set(vc),
+        "v_meta": cache["v_meta"].at[pid, slot].set(vm),
+    }
+    out = kops.razer_paged_kv_attention_verify(q, cache, pages, cl)
+    y = qlinear(out.reshape(b, t, -1), p["wo"], quant)
+    return y, cache
+
+
 def gqa_cache_init(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     shape = (batch, max_len, cfg.num_kv_heads, cfg.hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -624,6 +624,53 @@ def decode_step(params, token, caches, cur_len, cfg: ArchConfig,
     return logits, new_caches
 
 
+def decode_verify(params, tokens, caches, cur_len, cfg: ArchConfig,
+                  quant: QuantLike = DEFAULT_QUANT, *, pages):
+    """Speculative VERIFY step: ``tokens`` (B, T) int32 -- the last committed
+    token plus the T-1 draft tokens per slot -- produces logits for ALL T
+    positions in one pass: (logits (B, T, V), new caches).
+
+    Paged-pool GQA stacks only (the archs ``serving.pagepool`` admits); each
+    attention layer goes through ``attn.gqa_decode_verify``, which scatters
+    all T quantized K/V writes and runs ONE multi-query paged-attention call
+    with per-query ``cur_len + t`` masking.  Position t's logits predict the
+    token at ``cur_len + t + 1``: the accept rule compares them to the drafts
+    and the first disagreement (or the bonus position) supplies the target
+    model's own argmax, so greedy outputs match vanilla decode exactly."""
+    x = embed(tokens, params["embed"], cfg.cdtype)  # (B, T, d)
+
+    new_caches = []
+    for gi, (ltype, count) in enumerate(layer_groups(cfg)):
+        if ltype not in ("a", "m"):
+            raise ValueError(
+                f"speculative verify supports paged GQA attention stacks only, "
+                f"got layer type {ltype!r} (serving/pagepool.py rejects these archs)"
+            )
+        lt = ltype
+
+        def body(carry, lp_cache, _lt=lt):
+            x, = carry
+            lp, cache = lp_cache
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            mix, cache = attn.gqa_decode_verify(h, lp["mixer"], cfg, cache, cur_len,
+                                                quant=quant, pages=pages)
+            x = x + mix
+            h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if _lt == "m":
+                y, _ = moe_mod.moe_forward(h2, lp["moe"], cfg, quant=quant)
+                x = x + y
+            else:
+                x = x + _mlp_fwd(h2, lp, cfg, quant)
+            return (x,), cache
+
+        (x,), cache_stack = _scan(body, (x,), (params[f"layers_{gi}"], caches[gi]))
+        new_caches.append(cache_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, head), new_caches
+
+
 def _sinusoid_at(pos, d: int):
     dim = jnp.arange(d // 2).astype(jnp.float32)
     ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)

@@ -149,6 +149,10 @@ class Engine:
         self.policy = as_policy(serve_cfg.quant)
         # policy.kv implies a quantized cache even without the legacy flag
         self.kv_quant = bool(serve_cfg.kv_quant or self.policy.kv is not None)
+        # keep the dense tree reachable for self-speculative serving: the
+        # draft side re-quantizes the SAME checkpoint under a cheaper policy
+        # (serving/speculative.py), which needs pre-packing weights
+        self._raw_params = params
         if self.policy.mode == "packed":
             params = pack_model_weights(params, cfg, serve_cfg.quant)
         if mesh is not None:
@@ -170,6 +174,9 @@ class Engine:
         # power-of-two bucket shape); + the prefix-cache suffix continuation
         self._prefill_jit = None
         self._suffix_jit = None
+        # speculative decoders keyed by resolved draft policy (jits + draft
+        # params are reused across serve() calls)
+        self._spec_cache: Dict[Any, Any] = {}
 
     # -- internals ----------------------------------------------------------
     def _decode_step(self, params, token, caches, cur_len, enc):
@@ -314,6 +321,25 @@ class Engine:
             return tf.decode_step(params, token, caches, cur_len, self.cfg, self.quant,
                                   pages=pages)
 
+    def draft_source_params(self):
+        """Param tree the speculative draft side re-quantizes: the dense
+        (pre-packing) tree for a packed engine, else the served params
+        themselves (already placed; fakequant policies apply at forward
+        time)."""
+        return self._raw_params if self.policy.mode == "packed" else self.params
+
+    def _speculator(self, draft_policy):
+        """Build (or reuse) the ``SpeculativeDecoder`` for a draft policy --
+        keyed by the resolved policy so repeated ``serve`` calls share jits
+        and draft params.  Callable drafts (test seam) key by identity."""
+        from repro.serving.speculative import SpeculativeDecoder, resolve_draft_policy
+
+        resolved = resolve_draft_policy(draft_policy)
+        key = resolved if isinstance(resolved, QuantPolicy) else id(resolved)
+        if key not in self._spec_cache:
+            self._spec_cache[key] = SpeculativeDecoder(self, draft_policy)
+        return self._spec_cache[key]
+
     def _serve_prefill(self, prompt: Sequence[int]):
         """Prefill ONE request, padded to a power-of-two bucket so the jitted
         prefill compiles once per bucket, not once per prompt length.
@@ -389,7 +415,8 @@ class Engine:
         return reqs
 
     def serve(self, requests, *, sched_cfg=None, pool_cfg=None,
-              max_new_tokens: Optional[int] = None, prefix_cache: bool = True):
+              max_new_tokens: Optional[int] = None, prefix_cache: bool = True,
+              speculate_k: int = 0, draft_policy=None):
         """Continuous batching: serve a stream of requests over the paged
         RaZeR-quantized KV pool, decoding a dynamic batch each iteration.
 
@@ -408,13 +435,28 @@ class Engine:
         suffix, and greedy outputs are BIT-IDENTICAL to the uncached run --
         prefill attention reads the same wire bytes either way.
 
+        ``speculate_k > 0`` turns on self-speculative decoding: each decode
+        iteration drafts ``k`` tokens per running slot with the same
+        checkpoint under ``draft_policy`` (a cheaper ``QuantPolicy`` / format
+        name; default fakequant nvfp4), then verifies all ``k+1`` positions
+        in ONE multi-query paged-attention pass, rolling rejected tail pages
+        back via ``pool.truncate`` -- see ``serving/speculative.py``.  Greedy
+        outputs stay bit-identical to ``speculate_k=0`` for ANY draft policy;
+        only throughput changes (with the accept rate).
+
         Returns a ``ServeReport`` (outputs in submission order + latency /
-        throughput / pool / prefix-cache stats)."""
+        throughput / pool / prefix-cache / speculation stats)."""
         from repro.serving.pagepool import KVPagePool, PagePoolConfig
         from repro.serving.prefixcache import PrefixCache
         from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 
         sched_cfg = sched_cfg or SchedulerConfig()
+        if speculate_k:
+            sched_cfg = dataclasses.replace(sched_cfg, speculate_k=speculate_k)
+        k = sched_cfg.speculate_k
+        if k < 0:
+            raise ValueError(f"speculate_k must be >= 0, got {k}")
+        spec = self._speculator(draft_policy) if k else None
         n_new = max_new_tokens or self.scfg.max_new_tokens
         reqs = self._as_requests(requests, n_new)
         if pool_cfg is None:
@@ -431,6 +473,9 @@ class Engine:
 
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0
+        # the cached speculator accumulates stats across serve() calls;
+        # report this run's delta against a snapshot
+        spec_base = dataclasses.replace(spec.stats) if spec else None
         decode_steps = prefill_tokens = cached_tokens = 0
         peak_pages = peak_slots = 0
         # slot->pages assignments only change on admission/retirement, so the
@@ -492,6 +537,14 @@ class Engine:
             batch = sched.decode_batch()
             if batch is None:
                 continue
+            if spec is not None:
+                # draft-k-verify-1: the speculator appends/truncates pages
+                # every iteration, so the cached table is useless here
+                spec.decode_iteration(pool, sched, batch, k, now())
+                decode_steps += 1
+                page_table = None
+                peak_pages = max(peak_pages, pool.pages_in_use)
+                continue
             seq_ids, tokens, cur_lens = batch
             if page_table is None:
                 page_table = pool.page_table(seq_ids)
@@ -514,6 +567,12 @@ class Engine:
             cache_lookups=cache.lookups if cache else 0,
             cache_hits=cache.hits if cache else 0,
             cache_evictions=cache.evictions if cache else 0,
+            speculate_k=k,
+            drafted_tokens=spec.stats.drafted - spec_base.drafted if spec else 0,
+            accepted_drafts=spec.stats.accepted - spec_base.accepted if spec else 0,
+            draft_steps=spec.stats.draft_steps - spec_base.draft_steps if spec else 0,
+            draft_time=spec.stats.draft_time - spec_base.draft_time if spec else 0.0,
+            verify_time=spec.stats.verify_time - spec_base.verify_time if spec else 0.0,
         )
 
 
@@ -540,6 +599,17 @@ class ServeReport:
     cache_lookups: int = 0
     cache_hits: int = 0
     cache_evictions: int = 0
+    # speculative decoding (serving/speculative.py): with ``speculate_k > 0``
+    # each decode_step is one draft-k-verify-1 iteration; ``drafted_tokens``
+    # counts draft proposals, ``accepted_drafts`` the ones the target's argmax
+    # agreed with (an iteration commits 1 + accepted tokens).  draft_time /
+    # verify_time split the decode wall clock into overhead vs target work
+    speculate_k: int = 0
+    drafted_tokens: int = 0
+    accepted_drafts: int = 0
+    draft_steps: int = 0
+    draft_time: float = 0.0
+    verify_time: float = 0.0
 
     @property
     def outputs(self) -> List[List[int]]:
@@ -552,6 +622,23 @@ class ServeReport:
         """Fraction of prompt tokens served from the prefix cache."""
         total = self.cached_tokens + self.prefill_tokens
         return self.cached_tokens / total if total else 0.0
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of draft proposals the target's argmax accepted."""
+        return self.accepted_drafts / self.drafted_tokens if self.drafted_tokens else 0.0
+
+    @property
+    def draft_overhead(self) -> float:
+        """Fraction of speculative decode wall time spent drafting."""
+        total = self.draft_time + self.verify_time
+        return self.draft_time / total if total else 0.0
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Mean committed tokens per decode iteration (1.0 for vanilla decode;
+        speculation pushes this toward ``1 + k * accept_rate``)."""
+        return self.new_tokens / self.decode_steps if self.decode_steps else 0.0
 
     @property
     def tokens_per_s(self) -> float:

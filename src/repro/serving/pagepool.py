@@ -331,6 +331,42 @@ class KVPagePool:
             added.append(pages[-1])
         return added
 
+    def truncate(self, seq_id: int, new_len: int) -> List[int]:
+        """Shrink a sequence's page list to cover ``new_len`` tokens, dropping
+        ownership of the tail pages (speculative-decode rollback: rejected
+        draft positions sit past the committed length, so the pages holding
+        only them pop off the page-table tail and -- when this sequence was
+        their last owner -- return to the free list).  The wire bytes are NOT
+        erased: stale positions >= ``new_len`` never attend (``cur_len``
+        masking), exactly like null-page garbage writes.  Returns the popped
+        physical pages (newest first).
+
+        A tail page another owner still holds (a prefix cache, a sharing
+        sequence) merely loses this sequence as an owner -- though in the
+        serving loop rollback only ever pops sequence-private speculative
+        pages: shared prefix pages cover prompt tokens, and ``cur_len`` never
+        rolls back below the prompt."""
+        if seq_id not in self._seq_pages:
+            raise ValueError(
+                f"truncate() for unknown sequence {seq_id}: it holds no pages "
+                f"(never allocated, or already released)"
+            )
+        if new_len < 0:
+            raise ValueError(f"truncate() to negative length {new_len}")
+        pages = self._seq_pages[seq_id]
+        keep = self.pages_for(new_len)
+        popped: List[int] = []
+        while len(pages) > keep:
+            pg = pages.pop()
+            if self._pending_forks.get(seq_id, (None,))[0] == pg:
+                # the deferred COW copy targeted this page: cancel the fork
+                # and unpin its source (property-suite interleavings; the
+                # serve loop never truncates into the prompt's COW page)
+                self.decref(self._pending_forks.pop(seq_id)[1])
+            self.decref(pg)
+            popped.append(pg)
+        return popped
+
     def flush_forks(self, seq_id: int) -> None:
         """Execute the sequence's deferred copy-on-write page copy (no-op if
         none pending).  Called right before the sequence's own prefill reads

@@ -85,10 +85,19 @@ class SchedulerConfig:
     ``max_slots`` is the decode batch width the step function is compiled
     for; ``prefill_token_budget`` caps prompt tokens admitted per iteration
     so a burst of long prompts cannot starve running decodes (the
-    prefill/decode interleave ratio knob)."""
+    prefill/decode interleave ratio knob).
+
+    ``speculate_k`` > 0 (speculative decoding, serving/speculative.py) widens
+    the worst-case reservation to ``len(prompt) + max_new_tokens + k``: a
+    verify step writes up to k speculative positions past the committed
+    length before rollback, so those pages must exist even at the length cap.
+    Rolled-back tail pages return to the free list (``KVPagePool.truncate``)
+    but stay RESERVED for their sequence -- admission subtracts that headroom
+    (see ``_available_pages``) so re-appending them can never fail."""
 
     max_slots: int = 8
     prefill_token_budget: int = 512
+    speculate_k: int = 0
 
 
 class Scheduler:
@@ -104,10 +113,25 @@ class Scheduler:
         self.running: Dict[int, Request] = {}  # slot -> request
         self.finished: List[Request] = []
         self._free_slots: List[int] = list(range(cfg.max_slots - 1, -1, -1))
+        # rid -> worst-case page reservation made at admission.  With
+        # speculate_k > 0 a rollback (pool.truncate) can return reserved tail
+        # pages to the free list mid-decode; they remain spoken for, so
+        # admission must not hand them to a new request (_available_pages)
+        self._need_pages: Dict[int, int] = {}
+
+    def _available_pages(self) -> int:
+        """Free pages admission may actually claim: the pool's free count
+        minus speculative-rollback headroom (pages reserved for admitted
+        sequences that truncate() returned to the free list -- their next
+        draft/verify burst re-appends them, and that append must never fail)."""
+        headroom = 0
+        for rid, need in self._need_pages.items():
+            headroom += max(need - len(self.pool.sequence_pages(rid)), 0)
+        return self.pool.num_free_pages - headroom
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        need = len(req.prompt) + req.max_new_tokens
+        need = len(req.prompt) + req.max_new_tokens + self.cfg.speculate_k
         if req.state != WAITING or req.out_tokens or req.slot is not None:
             raise ValueError(
                 f"request {req.rid} carries stale serving state "
@@ -123,9 +147,11 @@ class Scheduler:
         if len(req.prompt) == 0:
             raise ValueError(f"request {req.rid}: empty prompt (need >= 1 token)")
         if need > self.pool.pool_cfg.max_len:
+            spec = (f" + speculate_k ({self.cfg.speculate_k})"
+                    if self.cfg.speculate_k else "")
             raise ValueError(
                 f"request {req.rid}: prompt ({len(req.prompt)}) + max_new_tokens "
-                f"({req.max_new_tokens}) = {need} exceeds the pool max_len "
+                f"({req.max_new_tokens}){spec} = {need} exceeds the pool max_len "
                 f"{self.pool.pool_cfg.max_len}; raise PagePoolConfig.max_len or "
                 f"shorten the request"
             )
@@ -155,14 +181,15 @@ class Scheduler:
         every page past the cached prefix come from the free list, evicting
         LRU unreferenced cached pages under pressure (matched pages pinned)."""
         shared = list(match.pages) if match is not None else []
-        need = self.pool.pages_for(len(req.prompt) + req.max_new_tokens)
+        need = self.pool.pages_for(
+            len(req.prompt) + req.max_new_tokens + self.cfg.speculate_k)
         fresh = need - len(shared)
-        short = fresh - self.pool.num_free_pages
+        short = fresh - self._available_pages()
         if short > 0 and self.cache is not None:
             protect = shared + ([match.cow_page] if match and match.cow_page is not None
                                 else [])
             self.cache.evict(short, protect=protect)
-        return fresh <= self.pool.num_free_pages
+        return fresh <= self._available_pages()
 
     def admit(self, now: float) -> List[Request]:
         """Admit WAITING requests in arrival order (FIFO on ties) that (a)
@@ -212,10 +239,12 @@ class Scheduler:
                 if not self._reserve(req, None):
                     break
             self.waiting.pop(0)
+            need = len(req.prompt) + req.max_new_tokens + self.cfg.speculate_k
             self.pool.allocate(
-                req.rid, len(req.prompt) + req.max_new_tokens,
+                req.rid, need,
                 shared=match.pages if match is not None else (),
                 cow_src=match.cow_page if match is not None else None)
+            self._need_pages[req.rid] = self.pool.pages_for(need)
             if self.cache is not None:
                 self.cache.record(match)  # one lookup/hit per admitted request
                 # publish the request's full prompt chunks NOW, pointing at its
@@ -252,8 +281,10 @@ class Scheduler:
         if not self._reserve(req, match):
             return False
         self.waiting.pop(0)
-        self.pool.allocate(req.rid, len(req.prompt) + req.max_new_tokens,
+        need = len(req.prompt) + req.max_new_tokens + self.cfg.speculate_k
+        self.pool.allocate(req.rid, need,
                            shared=match.pages, cow_src=match.cow_page)
+        self._need_pages[req.rid] = self.pool.pages_for(need)
         if self.cache is not None:
             self.cache.record(match)  # a dedup is the strongest possible hit
         req.cached_tokens = len(req.prompt)
@@ -294,9 +325,22 @@ class Scheduler:
     def post_decode(self, slot_tokens: Sequence[int], now: float) -> List[Request]:
         """Record one sampled token per RUNNING slot; retire finished
         requests (slot + pages freed).  Returns the newly finished."""
+        return self.post_verify([[t] for t in slot_tokens], now)
+
+    def post_verify(self, slot_commits: Sequence[Sequence[int]], now: float
+                    ) -> List[Request]:
+        """Record a BURST of verified tokens per RUNNING slot (speculative
+        decode commit: the accepted drafts plus the target model's own token).
+        Tokens append one at a time with the vanilla done-check between them,
+        so eos / max_new truncation lands exactly where step-by-step decode
+        would and surplus verified tokens are dropped.  Returns the newly
+        finished requests."""
         done: List[Request] = []
         for slot, req in list(self.running.items()):
-            req.out_tokens.append(int(slot_tokens[slot]))
+            for tok in slot_commits[slot]:
+                req.out_tokens.append(int(tok))
+                if req.done:
+                    break
             if req.done:
                 del self.running[slot]
                 self._retire(req, now)
@@ -307,6 +351,7 @@ class Scheduler:
         req.state = FINISHED
         req.finish_time = now
         self.pool.release(req.rid)
+        self._need_pages.pop(req.rid, None)
         self._free_slots.append(req.slot)
         req.slot = None
         self.finished.append(req)

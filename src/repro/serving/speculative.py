@@ -1,0 +1,214 @@
+"""Self-speculative draft-k-verify-1 decoding over the paged RaZeR KV pool.
+
+Every serving bench since PR 4 is decode-bound, and vanilla decode pays one
+full target-model pass per token.  Speculative decoding spends k CHEAP draft
+passes guessing the next k tokens, then ONE target pass scoring all k+1
+positions at once (``kernels/paged_kv_attention.py``'s multi-query verify
+variant); every leading draft the target's own argmax agrees with commits for
+free, and the first disagreement still yields the target's token.  Greedy
+outputs are bit-identical to vanilla decode by construction -- verify computes
+exactly the logits step-by-step decode would (see the accept rule below) --
+so the speedup is pure scheduling, never accuracy.
+
+Self-speculative: the draft is the SAME checkpoint under a cheaper
+``QuantPolicy`` from the PR-1 format registry (e.g. plain bf16 drafting for a
+fakequant/packed target, or nvfp4 drafting for a razer target) -- no second
+checkpoint, the registry acting as a *speed* knob.  Draft quality only moves
+the accept rate; correctness never depends on it, so ``draft_policy`` may
+even be a plain callable producing oracle/adversarial drafts (the rollback
+test seam).
+
+One iteration over the running slots, pool state in brackets::
+
+    tokens   [..committed | last]                cur_len = C
+    draft    k x decode_step(draft params)       writes draft KV at C..C+k-1
+    verify   1 x decode_verify(target params)    REwrites target KV at C..C+k
+    accept   longest prefix drafts[t] == argmax(verify[t]), plus one
+    commit   scheduler.post_verify (eos/max_new trim exactly like vanilla)
+    rollback pool.truncate(rid, new C) -- rejected tail pages freed
+
+Rollback never erases wire bytes: stale positions >= cur_len simply never
+attend (the same invariant that makes null-page garbage writes inert).  The
+scheduler reserves ``len(prompt) + max_new + k`` pages per request so the
+speculative tail always fits, and its ``_available_pages`` ledger keeps
+truncated-but-reserved pages out of admission's hands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import QuantPolicy, as_policy
+from repro.models import transformer as tf
+from repro.parallel.sharding import sharding_ctx
+
+__all__ = ["SpeculativeDecoder", "SpecStats", "resolve_draft_policy"]
+
+# draft format when serve(speculate_k=...) is called without a draft_policy:
+# fakequant nvfp4 -- the paper's baseline format, valid for any weight shape
+DEFAULT_DRAFT_FORMAT = "nvfp4"
+
+# test/experiment seam: a callable draft "model" (tokens, cur_lens, t) -> next
+# draft token per slot.  Oracle or adversarial drafts exercise accept rates 0,
+# 1, and mixed without crafting checkpoints; the verify pass never trusts it.
+DraftFn = Callable[[np.ndarray, np.ndarray, int], np.ndarray]
+
+
+def resolve_draft_policy(policy_like) -> Union[QuantPolicy, DraftFn]:
+    """Normalize serve()'s ``draft_policy`` argument: None -> the default
+    fakequant draft format, a format-name string -> fakequant of that format,
+    a QuantPolicy/QuantConfig -> itself, a callable -> an oracle draft fn."""
+    if policy_like is None:
+        return QuantPolicy.fakequant(DEFAULT_DRAFT_FORMAT)
+    if callable(policy_like) and not isinstance(policy_like, (QuantPolicy, type)):
+        return policy_like
+    if isinstance(policy_like, str):
+        # "bf16" = draft with the raw dense weights (no fake-quant at all);
+        # any other name is a registered format, drafted via fakequant
+        if policy_like == "bf16":
+            return QuantPolicy.bf16()
+        return QuantPolicy.fakequant(policy_like)
+    return as_policy(policy_like)
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Accept-rate / draft-cost accounting for one serve run."""
+
+    drafted: int = 0        # draft tokens proposed (k per active slot per step)
+    accepted: int = 0       # drafts the target's argmax agreed with
+    draft_steps: int = 0    # draft decode passes (k per iteration)
+    verify_steps: int = 0   # multi-query verify passes (1 per iteration)
+    draft_time: float = 0.0   # wall seconds inside the draft loop
+    verify_time: float = 0.0  # wall seconds inside verify + accept
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+
+class SpeculativeDecoder:
+    """Drives one engine's speculative decode iterations.
+
+    Holds the draft-side params (the engine's raw weights re-quantized under
+    the draft policy -- packed offline for a packed draft policy, fakequant
+    applied at forward time otherwise) and the two jitted steps: the 1-token
+    draft ``decode_step`` and the (k+1)-token ``decode_verify``.  Both donate
+    the pool caches exactly like the vanilla paged step."""
+
+    def __init__(self, engine, draft_policy=None):
+        self.engine = engine
+        resolved = resolve_draft_policy(draft_policy)
+        if callable(resolved) and not isinstance(resolved, QuantPolicy):
+            self.draft_fn: Optional[DraftFn] = resolved
+            self.draft_quant = None
+            self.draft_params = None
+        else:
+            from repro.serving.engine import pack_model_weights
+
+            self.draft_fn = None
+            self.draft_quant = resolved
+            raw = engine.draft_source_params()
+            if resolved.mode == "packed":
+                draft = pack_model_weights(raw, engine.cfg, resolved)
+            else:
+                draft = raw  # fakequant/bf16 applies per-forward via the policy
+            if engine.mesh is not None and draft is not raw:
+                from repro.parallel.sharding import param_sharding_tree
+
+                draft = jax.device_put(draft, param_sharding_tree(draft, engine.mesh))
+            self.draft_params = draft
+        self.stats = SpecStats()
+
+        def _draft_step(params, token, caches, pages, cur_len):
+            with sharding_ctx(engine.mesh):
+                return tf.decode_step(params, token, caches, cur_len,
+                                      engine.cfg, self.draft_quant, pages=pages)
+
+        def _verify_step(params, tokens, caches, pages, cur_len):
+            with sharding_ctx(engine.mesh):
+                return tf.decode_verify(params, tokens, caches, cur_len,
+                                        engine.cfg, engine.quant, pages=pages)
+
+        self._draft_jit = jax.jit(_draft_step, donate_argnums=(2,))
+        self._verify_jit = jax.jit(_verify_step, donate_argnums=(2,))
+
+    def decode_iteration(self, pool, sched, batch, k: int, now: float) -> List:
+        """One draft-k-verify-1 iteration over a ``decode_batch`` result.
+        Commits accepted tokens through ``sched.post_verify``, rolls back
+        rejected tail pages, updates ``self.stats``.  Returns the newly
+        finished requests (the engine invalidates its cached page table --
+        appends/truncates change rows every iteration anyway)."""
+        seq_ids, tokens, cur_lens = batch
+        b = len(seq_ids)
+        # cover the k speculative writes: re-appends pages a previous rollback
+        # returned to the free list (reserved by the scheduler's ledger, so
+        # this can never exhaust the pool)
+        for slot, rid in enumerate(seq_ids):
+            if rid is not None:
+                pool.append(rid, cur_lens[slot] + k + 1)
+        page_table = pool.page_table(seq_ids)
+
+        act = np.asarray([s is not None for s in seq_ids])
+        cur = np.asarray(cur_lens, np.int32)
+        tok = np.asarray(tokens, np.int32)
+        drafts = np.zeros((k, b), np.int32)
+
+        t0 = time.perf_counter()
+        for t in range(k):
+            # idle slots stay pinned at position 0 (null page); their drafts
+            # are garbage and their slot commits nothing
+            cl_t = np.where(act, cur + t, 0).astype(np.int32)
+            if self.draft_fn is not None:
+                nxt = np.asarray(self.draft_fn(tok, cl_t, t), np.int32)
+            else:
+                logits, pool.caches = self._draft_jit(
+                    self.draft_params, jnp.asarray(tok), pool.caches,
+                    page_table, jnp.asarray(cl_t))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            drafts[t] = nxt
+            tok = nxt
+        self.stats.draft_time += time.perf_counter() - t0
+        self.stats.draft_steps += k
+
+        # ONE verify pass scores all k+1 positions: feed [last, d1..dk]; the
+        # logits at position t predict the token at cur_len + t + 1
+        t1 = time.perf_counter()
+        vtok = np.concatenate([np.asarray(tokens, np.int32)[None], drafts], axis=0).T
+        logits, pool.caches = self._verify_jit(
+            self.engine.params, jnp.asarray(vtok), pool.caches, page_table,
+            jnp.asarray(np.where(act, cur, 0).astype(np.int32)))
+        targets = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, k+1)
+        self.stats.verify_time += time.perf_counter() - t1
+        self.stats.verify_steps += 1
+
+        # greedy accept: commit targets[0..j] where j = longest prefix with
+        # drafts[t] == targets[t] -- position t+1's verify logits are only
+        # valid if its input token (draft t) matches what vanilla decode
+        # would have fed, i.e. targets[t]; the first mismatch still commits
+        # the target's own token (j=0 reduces to vanilla decode)
+        commits: List[List[int]] = []
+        for i in range(b):
+            if not act[i]:
+                commits.append([])
+                continue
+            m = 1
+            while m <= k and drafts[m - 1, i] == targets[i, m - 1]:
+                m += 1
+            commits.append(targets[i, :m].tolist())
+            self.stats.accepted += m - 1
+        self.stats.drafted += k * int(act.sum())
+
+        finished = sched.post_verify(commits, now)
+        # rollback: drop pages covering only rejected positions (committed KV
+        # spans [0, cur_len); the stale target/draft bytes past it never
+        # attend).  Retired requests already released everything.
+        for slot, req in sched.running.items():
+            if seq_ids[slot] == req.rid:
+                pool.truncate(req.rid, req.cur_len)
+        return finished

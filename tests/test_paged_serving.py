@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st  # optional-hypothesis shim
+
 from repro.configs import get_config
 from repro.core.policy import QuantPolicy
 from repro.kernels import ops
@@ -142,6 +144,101 @@ def test_paged_ref_matches_contiguous_ref():
         q, {"k_codes": pooled(kc), "k_meta": pooled(km),
             "v_codes": pooled(vc), "v_meta": pooled(vm)}, pt, cl)
     np.testing.assert_array_equal(np.asarray(contiguous), np.asarray(paged))
+
+
+# ---------------------------------------------------------------------------
+# multi-query verify kernel (speculative decode)
+# ---------------------------------------------------------------------------
+def _verify_fixture(rng, b, kvh, hd, ps, npg):
+    """Random pool + DISJOINT per-sequence page tables in scrambled physical
+    order (each sequence owns its pages, like the real allocator)."""
+    p = b * npg + 1
+    kc, km = kv_quantize(jnp.asarray(rng.standard_normal((p, ps, kvh, hd)), jnp.float32))
+    vc, vm = kv_quantize(jnp.asarray(rng.standard_normal((p, ps, kvh, hd)), jnp.float32))
+    cache = {"k_codes": kc, "k_meta": km, "v_codes": vc, "v_meta": vm}
+    perm = rng.permutation(np.arange(1, p))
+    pt = perm.reshape(b, npg).astype(np.int32)
+    return cache, jnp.asarray(pt)
+
+
+@pytest.mark.parametrize("ps", [3, 8, 16])
+@pytest.mark.parametrize("t", [1, 2, 4])
+def test_verify_kernel_matches_ref_interpret(ps, t):
+    """Pallas verify kernel (interpret) vs the jnp reference across page sizes
+    and draft lengths, with cur_len values straddling page boundaries."""
+    rng = np.random.default_rng(ps * 10 + t)
+    b, h, kvh, hd, npg = 3, 4, 2, 32, 4
+    cache, pt = _verify_fixture(rng, b, kvh, hd, ps, npg)
+    # one slot right at a boundary, one mid-page, one near the table's end
+    cl = jnp.asarray([ps - 1, ps + ps // 2, npg * ps - t - 1], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, t, h, hd)).astype(np.float32))
+    out_ref = ops.razer_paged_kv_attention_verify(q, cache, pt, cl)
+    out_pal = ops.razer_paged_kv_attention_verify(
+        q, cache, pt, cl, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_verify_t1_matches_single_query_decode():
+    """T=1 verify at committed length c IS a decode step at cur_len c+1: the
+    one query attends positions < c+1, exactly the single-query kernel's
+    masking -- the identity that makes speculative decode bit-exact."""
+    rng = np.random.default_rng(7)
+    b, h, kvh, hd, ps, npg = 2, 4, 2, 32, 8, 3
+    cache, pt = _verify_fixture(rng, b, kvh, hd, ps, npg)
+    cl = jnp.asarray([13, 20], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, 1, h, hd)).astype(np.float32))
+    verify = ops.razer_paged_kv_attention_verify(q, cache, pt, cl)
+    single = ops.razer_paged_kv_attention(q[:, 0], cache, pt, cl + 1)
+    np.testing.assert_allclose(np.asarray(verify[:, 0]), np.asarray(single),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("ps", [3, 8])
+def test_verify_masks_rollback_shaped_tails(ps):
+    """Rollback leaves stale wire bytes past cur_len (append k, truncate
+    j < k): positions >= cur_len + t + 1 must never leak into the output, so
+    scribbling garbage there cannot change any query's result."""
+    rng = np.random.default_rng(11)
+    b, h, kvh, hd, npg, t = 2, 4, 2, 32, 4, 3
+    cache, pt = _verify_fixture(rng, b, kvh, hd, ps, npg)
+    cl = jnp.asarray([ps + 1, 2 * ps - 1], jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, t, h, hd)).astype(np.float32))
+    clean = ops.razer_paged_kv_attention_verify(q, cache, pt, cl)
+    # scribble every position past the last attended one (cur_len + t) in
+    # each sequence's own pages -- the rolled-back speculative tail
+    dirty = {k: np.asarray(v).copy() for k, v in cache.items()}
+    for i in range(b):
+        for pos in range(int(cl[i]) + t, npg * ps):
+            pg, slot = int(pt[i, pos // ps]), pos % ps
+            for key in dirty:
+                dirty[key][pg, slot] = rng.integers(0, 256, dirty[key].shape[2:])
+    dirty = {k: jnp.asarray(v) for k, v in dirty.items()}
+    out_ref = ops.razer_paged_kv_attention_verify(q, dirty, pt, cl)
+    out_pal = ops.razer_paged_kv_attention_verify(
+        q, dirty, pt, cl, force_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_ref), np.asarray(clean))
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(clean),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 30), st.integers(1, 4), st.sampled_from([3, 8, 16]),
+       st.integers(1, 3))
+def test_verify_kernel_fuzz(seed, t, ps, b):
+    """Hypothesis sweep: random shapes/lengths, Pallas-interpret vs ref."""
+    rng = np.random.default_rng(seed)
+    h, kvh, hd = 4, 2, 32
+    npg = int(rng.integers(2, 5))
+    cache, pt = _verify_fixture(rng, b, kvh, hd, ps, npg)
+    hi = npg * ps - t  # keep every query position inside the page table
+    cl = jnp.asarray(rng.integers(0, hi + 1, size=b), jnp.int32)
+    q = jnp.asarray(rng.standard_normal((b, t, h, hd)).astype(np.float32))
+    out_ref = ops.razer_paged_kv_attention_verify(q, cache, pt, cl)
+    out_pal = ops.razer_paged_kv_attention_verify(
+        q, cache, pt, cl, force_pallas=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_pal), np.asarray(out_ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------

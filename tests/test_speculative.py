@@ -1,0 +1,299 @@
+"""Speculative decoding tests: draft-k-verify-1 over the paged pool.
+
+The load-bearing claim is BIT-EXACTNESS: for ANY draft policy -- perfect,
+adversarial, or merely cheap -- greedy ``serve(speculate_k=k)`` must emit
+exactly the tokens ``speculate_k=0`` does, because the verify pass computes
+the same logits step-by-step decode would and rejected drafts roll back via
+``pool.truncate``.  Draft quality may only move the accept rate / step count.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import QuantPolicy
+from repro.models import transformer as tf
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.pagepool import KVPagePool, PagePoolConfig
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+from repro.serving.speculative import SpeculativeDecoder, resolve_draft_policy
+
+
+def _cfg(arch="llama3_2_3b"):
+    return get_config(arch).reduced()
+
+
+def _engine(arch="llama3_2_3b", seed=0, **kw):
+    cfg = _cfg(arch)
+    params = tf.init_params(jax.random.PRNGKey(seed), cfg)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("max_new_tokens", 8)
+    return Engine(params, cfg, ServeConfig(**kw)), cfg
+
+
+def _prompts(cfg, sizes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, size=n).tolist() for n in sizes]
+
+
+# ---------------------------------------------------------------------------
+# pool truncate (rollback substrate)
+# ---------------------------------------------------------------------------
+def test_truncate_frees_tail_pages():
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=8, page_size=2, max_len=16))
+    pool.allocate(0, 6)  # 3 pages
+    assert pool.num_free_pages == 5
+    popped = pool.truncate(0, 3)  # pages_for(3) = 2: frees exactly one page
+    assert len(popped) == 1 and pool.num_free_pages == 6
+    assert pool.truncate(0, 3) == []  # idempotent at the same length
+    assert pool.truncate(0, 4) == []  # growing lengths never pop
+    popped = pool.truncate(0, 0)
+    assert len(popped) == 2 and pool.num_free_pages == 8
+    assert pool.sequence_pages(0) == []
+    pool.release(0)  # zero-page release is legal
+
+
+def test_truncate_validation():
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=4, page_size=2, max_len=8))
+    with pytest.raises(ValueError, match="unknown sequence"):
+        pool.truncate(3, 0)
+    pool.allocate(0, 4)
+    with pytest.raises(ValueError, match="negative"):
+        pool.truncate(0, -1)
+
+
+def test_truncate_shared_page_keeps_other_owner():
+    """Popping a tail page another sequence still owns only drops one ref;
+    the survivor's bytes stay attendable."""
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=8, page_size=2, max_len=16))
+    a = pool.allocate(0, 4)  # 2 pages
+    pool.allocate(1, 4, shared=a)  # co-owns both
+    assert pool.refcount(a[1]) == 2
+    pool.truncate(1, 2)  # drops seq 1's claim on the second page
+    assert pool.refcount(a[1]) == 1 and a[1] not in pool._free
+    assert pool.sequence_pages(0) == a  # owner unaffected
+
+
+def test_truncate_cancels_pending_cow_fork():
+    """Truncating away a never-flushed COW destination unpins its source."""
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=8, page_size=2, max_len=16))
+    donor = pool.allocate(0, 4)
+    pool.allocate(1, 4, shared=donor[:1], cow_src=donor[1])
+    assert pool.refcount(donor[1]) == 2  # owner + fork pin
+    pool.truncate(1, 2)  # pops the fork's dst page
+    assert pool.refcount(donor[1]) == 1
+    pool.flush_forks(1)  # canceled: must be a no-op, not a double-decref
+    assert pool.refcount(donor[1]) == 1
+
+
+def test_append_after_truncate_restores_pages():
+    """The serve loop's per-iteration cycle: grow k+1 ahead, roll back, grow
+    again -- the reserved pages must cycle without leaking."""
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=4, page_size=2, max_len=8))
+    pool.allocate(0, 3)
+    free0 = pool.num_free_pages
+    for _ in range(5):
+        pool.append(0, 3 + 4)
+        pool.truncate(0, 3)
+    assert pool.num_free_pages == free0 and len(pool.sequence_pages(0)) == 2
+
+
+# ---------------------------------------------------------------------------
+# scheduler reservation with speculate_k
+# ---------------------------------------------------------------------------
+def test_scheduler_reserves_speculative_headroom():
+    """Admission must reserve len + max_new + k tokens, and pages a rollback
+    returns to the free list stay spoken for (_available_pages)."""
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=6, page_size=2, max_len=12))
+    sched = Scheduler(SchedulerConfig(max_slots=4, speculate_k=2), pool)
+    # 4 + 4 + 2 = 10 tokens -> 5 pages; a second such request must wait
+    for rid in (0, 1):
+        sched.submit(Request(rid=rid, prompt=[1, 2, 3, 4], max_new_tokens=4))
+    admitted = sched.admit(0.0)
+    assert [r.rid for r in admitted] == [0]
+    # rollback frees reserved tail pages -- admission still must not take them
+    pool.append(0, 4 + 3)
+    pool.truncate(0, 4)
+    assert pool.num_free_pages >= 2
+    assert sched.admit(0.0) == []
+    assert sched._available_pages() <= pool.num_free_pages - 2
+    # once the request retires, its reservation dies with it
+    sched.start(admitted[0], 9, 0.0)
+    sched.post_verify([[7, 7], [], [], []], 0.0)  # 3 of 4 new tokens
+    assert sched.admit(0.0) == []  # still decoding: reservation holds
+    sched.post_verify([[7], [], [], []], 0.0)  # max_new reached -> retired
+    assert [r.rid for r in sched.admit(0.0)] == [1]
+
+
+def test_scheduler_submit_rejects_overflow_with_speculation():
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=8, page_size=2, max_len=10))
+    sched = Scheduler(SchedulerConfig(speculate_k=3), pool)
+    with pytest.raises(ValueError, match="speculate_k"):
+        sched.submit(Request(rid=0, prompt=[1] * 4, max_new_tokens=4))
+    # the same request fits without speculation
+    Scheduler(SchedulerConfig(), pool).submit(
+        Request(rid=0, prompt=[1] * 4, max_new_tokens=4))
+
+
+def test_post_verify_trims_at_eos_and_max_new():
+    """Burst commits stop exactly where step-by-step decode would: surplus
+    verified tokens past eos / max_new are dropped."""
+    pool = KVPagePool(_cfg(), PagePoolConfig(num_pages=8, page_size=2, max_len=16))
+    sched = Scheduler(SchedulerConfig(max_slots=2), pool)
+    sched.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=4, eos_id=99))
+    sched.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=3))
+    a, b = sched.admit(0.0)
+    sched.start(a, 5, 0.0)
+    sched.start(b, 6, 0.0)
+    done = sched.post_verify([[7, 99, 8], [7, 8, 9]], 0.0)
+    assert a.out_tokens == [5, 7, 99]  # trimmed at eos, surplus dropped
+    assert b.out_tokens == [6, 7, 8]   # trimmed at max_new
+    assert {r.rid for r in done} == {0, 1}
+    assert pool.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# serve(): forced accept rates
+# ---------------------------------------------------------------------------
+def test_accept_rate_one_with_same_policy_draft():
+    """Draft == target -> every draft accepted, and k+1 tokens commit per
+    iteration (batch-invariant row numerics: the repo's standing assumption)."""
+    eng, cfg = _engine()
+    prompts = _prompts(cfg, (5, 11, 17, 3))
+    base = eng.serve(prompts)
+    for k in (1, 2, 3):
+        rep = eng.serve(prompts, speculate_k=k, draft_policy=eng.scfg.quant)
+        assert rep.outputs == base.outputs
+        assert rep.accept_rate == 1.0
+        assert rep.speculate_k == k
+        assert rep.decode_steps < base.decode_steps
+        assert rep.draft_steps == k * rep.decode_steps
+        assert rep.tokens_per_step > 1.0
+
+
+def test_accept_rate_zero_with_adversarial_draft():
+    """A draft that is ALWAYS wrong degrades to one committed token per
+    iteration -- and the outputs still match vanilla exactly."""
+    eng, cfg = _engine()
+    prompts = _prompts(cfg, (5, 9, 14))
+    base = eng.serve(prompts)
+    wrong = lambda tok, cl, t: (tok + 1) % cfg.vocab_size
+    rep = eng.serve(prompts, speculate_k=2, draft_policy=wrong)
+    assert rep.outputs == base.outputs
+    assert rep.accept_rate == 0.0 and rep.accepted_drafts == 0
+    assert rep.drafted_tokens > 0
+    assert rep.decode_steps == base.decode_steps  # no speedup, no slowdown
+
+
+def test_mixed_per_slot_acceptance():
+    """Per-slot disagreement: even slots get oracle drafts (from a vanilla
+    run's outputs), odd slots get garbage -- partial acceptance, identical
+    outputs."""
+    eng, cfg = _engine()
+    prompts = _prompts(cfg, (6, 6, 6, 6), seed=3)
+    base = eng.serve(prompts)
+    outs = base.outputs  # slot i serves request i (same-arrival FIFO admission)
+
+    def oracle_or_garbage(tok, cl, t):
+        nxt = np.zeros_like(tok)
+        for i in range(len(tok)):
+            if i % 2 == 0 and i < len(outs) and cl[i] + 1 < len(outs[i]):
+                nxt[i] = outs[i][cl[i] + 1]
+        return nxt
+
+    rep = eng.serve(prompts, speculate_k=2, draft_policy=oracle_or_garbage)
+    assert rep.outputs == base.outputs
+    assert 0.0 < rep.accept_rate < 1.0
+
+
+# ---------------------------------------------------------------------------
+# serve(): bit-identity across draft policies, archs, and sharing modes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_bit_identical_mixed_lengths_nvfp4_draft(k):
+    eng, cfg = _engine()
+    prompts = _prompts(cfg, (5, 11, 17, 3, 24), seed=1)
+    base = eng.serve(prompts)
+    rep = eng.serve(prompts, speculate_k=k, draft_policy="nvfp4")
+    assert rep.outputs == base.outputs
+
+
+def test_bit_identical_packed_moe_target():
+    """Packed MoE target (dbrx-style) with a bf16 draft over the raw tree."""
+    eng, cfg = _engine("dbrx_132b", max_new_tokens=6,
+                       quant=QuantPolicy.packed(kv_quant=True))
+    prompts = _prompts(cfg, (4, 9, 13), seed=2)
+    base = eng.serve(prompts)
+    rep = eng.serve(prompts, speculate_k=2, draft_policy="bf16")
+    assert rep.outputs == base.outputs
+    assert rep.decode_steps <= base.decode_steps
+
+
+def test_bit_identical_with_prefix_cache_and_dedup():
+    """Shared prefix pages + same-batch duplicates must survive speculation:
+    rollback only ever pops sequence-private pages, never shared ones."""
+    eng, cfg = _engine()
+    rng = np.random.default_rng(4)
+    base_prompt = rng.integers(1, cfg.vocab_size, size=16).tolist()
+    trace = [base_prompt,
+             base_prompt[:12] + rng.integers(1, cfg.vocab_size, size=3).tolist(),
+             list(base_prompt),            # same-batch duplicate (dedup)
+             base_prompt[:8]]              # pure prefix hit
+    base = eng.serve(trace)
+    for k in (1, 3):
+        rep = eng.serve(trace, speculate_k=k, draft_policy="nvfp4")
+        assert rep.outputs == base.outputs
+        assert rep.cached_tokens == base.cached_tokens  # sharing still happens
+
+
+def test_bit_identical_under_slot_pressure():
+    """More requests than slots + staggered arrivals: retirement/admission
+    churn interleaves with speculative grow/rollback."""
+    eng, cfg = _engine()
+    rng = np.random.default_rng(5)
+
+    def trace():  # serve() mutates Requests: fresh objects per run
+        return [Request(rid=i,
+                        prompt=rng_p[i],
+                        max_new_tokens=4 + (i % 3), arrival=0.002 * i)
+                for i in range(6)]
+
+    rng_p = [rng.integers(1, cfg.vocab_size, size=4 + i).tolist() for i in range(6)]
+    base = eng.serve(trace(), sched_cfg=SchedulerConfig(max_slots=2))
+    rep = eng.serve(trace(), sched_cfg=SchedulerConfig(max_slots=2),
+                    speculate_k=2, draft_policy="nvfp4")
+    assert rep.outputs == base.outputs
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+def test_resolve_draft_policy_forms():
+    assert resolve_draft_policy(None) == QuantPolicy.fakequant("nvfp4")
+    assert resolve_draft_policy("fouroversix") == QuantPolicy.fakequant("fouroversix")
+    assert resolve_draft_policy("bf16") == QuantPolicy.bf16()
+    pol = QuantPolicy.packed()
+    assert resolve_draft_policy(pol) is pol
+    fn = lambda tok, cl, t: tok
+    assert resolve_draft_policy(fn) is fn
+
+
+def test_speculator_cached_per_policy():
+    eng, _ = _engine()
+    assert eng._speculator("nvfp4") is eng._speculator("nvfp4")
+    assert eng._speculator("nvfp4") is not eng._speculator("bf16")
+
+
+def test_serve_rejects_negative_k():
+    eng, cfg = _engine()
+    with pytest.raises(ValueError, match="speculate_k"):
+        eng.serve(_prompts(cfg, (4,)), speculate_k=-1)
+
+
+def test_report_speculation_stats_zero_when_off():
+    eng, cfg = _engine()
+    rep = eng.serve(_prompts(cfg, (4, 7)))
+    assert rep.speculate_k == 0 and rep.drafted_tokens == 0
+    assert rep.accept_rate == 0.0 and rep.draft_overhead == 0.0
+    assert rep.tokens_per_step >= 1.0
