@@ -173,6 +173,59 @@ def sharded_grouped_moe() -> List:
     return rows
 
 
+def tp_roofline() -> List:
+    """Tensor-parallel K-shard roofline (docs/parallelism.md#k-sharding):
+    per-device packed bank bytes at K/tp wire rows per device, with the
+    partial-sum exchange FUSED into the kernel epilogue (one last-dim-tiled
+    psum_scatter of bf16 partials) vs the gather-then-matmul alternative
+    (all-gather the missing (tp-1)/tp of the bank, then read the whole bank
+    locally).  Decode regime: every term is bytes moved, so bytes == time.
+
+    Per device and step, at M decode tokens:
+      fused  = bank/tp read + 2*M*K/tp activation read
+               + 2*M*N*(tp-1)/tp partial exchange + 2*M*N/tp output write
+      gather = bank*(tp-1)/tp wire in + bank full read + 2*M*K + 2*M*N
+
+    The bank term dominates at decode M, so fused scales as 1/tp while
+    gather-then-matmul stays >= the replicated bank read -- the whole point
+    of making the K-shard a first-class placement concern.
+    """
+    rows = []
+    dense = [(name, k, n) for name, k, n in PAPER_SHAPES if "mlp" in name]
+    for name, k, n in dense:
+        bank = k * n / 2 + k * n / 16 + 4
+        for tp in (1, 2, 4, 8):
+            if k % (tp * 16) or n % tp:
+                continue
+            m = 16  # decode-sized batch
+            fused = bank / tp + 2 * m * k / tp + 2 * m * n * (tp - 1) / tp + 2 * m * n / tp
+            gather = bank * (tp - 1) / tp + bank + 2 * m * k + 2 * m * n
+            rows.append((
+                f"tp_roofline/{name}_tp{tp}", round(fused / HBM_BW * 1e6, 3),
+                f"per_dev_bank_mib={bank / tp / 2**20:.2f} "
+                f"exchange_kib={2 * m * n * (tp - 1) / tp / 2**10:.1f} "
+                f"speedup_vs_gather={gather / fused:.2f}x",
+            ))
+    for name, e, topk, d, f in MOE_SHAPES:
+        bank = _bank_bytes_packed(e, d, f)
+        for tp in (1, 2, 4, 8):
+            if d % (tp * 16) or f % (tp * 16):
+                continue
+            batch = 16
+            m = max(batch * topk // e, 1)  # decode tokens per expert row
+            acts = 2 * m * e * (2 * d + f)  # gate/up read d-shards, down reads f-shard
+            outs = 2 * m * e * (2 * f + d)
+            fused = bank / tp + acts / tp + outs * (tp - 1) / tp + outs / tp
+            gather = bank * (tp - 1) / tp + bank + acts + outs
+            rows.append((
+                f"tp_roofline/{name}_trio_tp{tp}", round(fused / HBM_BW * 1e6, 3),
+                f"per_dev_bank_mib={bank / tp / 2**20:.1f} "
+                f"exchange_kib={outs * (tp - 1) / tp / 2**10:.1f} "
+                f"speedup_vs_gather={gather / fused:.2f}x",
+            ))
+    return rows
+
+
 def grouped_kernel_correctness() -> List:
     """Grouped-kernel block sweep (interpret mode): the stacked-bank analogue
     of ``appE_block_autotune`` -- verifies the (E, M//bm, N//bn, K//bk) grid

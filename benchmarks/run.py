@@ -41,6 +41,7 @@ def main(argv=None) -> None:
         ("appE_autotune", kernel_bench.appE_block_autotune),
         ("grouped_moe_roofline", kernel_bench.grouped_moe_roofline),
         ("sharded_grouped_moe", kernel_bench.sharded_grouped_moe),
+        ("tp_roofline", kernel_bench.tp_roofline),
         ("grouped_kernel", kernel_bench.grouped_kernel_correctness),
         ("fig7_two_pass", kernel_bench.fig7_two_pass_model),
         ("appC1_kv", kv_quant.appC1_kv_quant),

@@ -205,6 +205,34 @@ class PackedRazerWeight:
     def tree_unflatten(cls, aux, children):
         return cls(*children, sv_magnitudes=aux[0], shape=aux[1])
 
+    def local_shard(self, k_shards: int) -> "PackedRazerWeight":
+        """Static metadata for a K/k_shards tensor-parallel shard of this weight.
+
+        Block scales live along K, so a slice of whole 16-element quant blocks
+        is itself a valid wire-format tensor: codes split between (K/tp/2, N)
+        byte rows, scale_meta between (K/tp/16, N) rows, and the per-tensor
+        scale (a scalar over the WHOLE tensor, not per block) replicates.  At
+        the shard_map boundary (core/qlinear.py) the body receives this
+        container with its array leaves already sliced to the local K rows;
+        ``shape`` is static aux data still naming the global K -- this
+        rewrites it to the local value.  The leaves are untouched.
+        """
+        k, n = self.shape
+        if k_shards <= 0 or k % (k_shards * 16):
+            raise ValueError(
+                f"cannot tensor-parallel-shard packed K={k} over tp={k_shards} "
+                f"devices: K must be divisible by tp*quant_block = "
+                f"{k_shards}*16 so every shard holds whole 16-element quant "
+                f"blocks (see docs/parallelism.md)"
+            )
+        return PackedRazerWeight(
+            codes=self.codes,
+            scale_meta=self.scale_meta,
+            tensor_scale=self.tensor_scale,
+            sv_magnitudes=self.sv_magnitudes,
+            shape=(k // k_shards, n),
+        )
+
     def dequantize(self):
         k, n = self.shape
         codes = unpack_fp4_codes(self.codes.T).reshape(n, k)  # (N, K)
@@ -267,16 +295,19 @@ class PackedStackedTensor:
             shape=(k, n),
         )
 
-    def local_shard(self, n_shards: int) -> "PackedStackedTensor":
-        """Static metadata for an E/n_shards expert-parallel shard of this bank.
+    def local_shard(self, n_shards: int, k_shards: int = 1) -> "PackedStackedTensor":
+        """Static metadata for an (E/n_shards, K/k_shards) shard of this bank.
 
         At the shard_map boundary (models/moe.py) the body receives this
         container with its array leaves already sliced to the local E/n_shards
-        expert rows, but ``shape`` is static aux data and still names the
-        global E -- this rewrites it to the local value.  The leaves themselves
+        expert rows (and, under tensor parallelism, the local K/k_shards wire
+        rows), but ``shape`` is static aux data and still names the global
+        sizes -- this rewrites it to the local values.  The leaves themselves
         are untouched: expert-parallel sharding splits the bank only on the
-        leading expert dim, never inside a packed (K, N) entry, so each local
-        row stays bit-identical to ``pack_weight(w[e])``.
+        leading expert dim, never inside a packed (K, N) entry, and a K-shard
+        splits between whole 16-element quant blocks (block scales live along
+        K), so each local row stays a valid wire-format tensor bit-identical
+        to packing that slice directly.
         """
         e, k, n = self.shape
         if n_shards <= 0 or e % n_shards:
@@ -285,12 +316,19 @@ class PackedStackedTensor:
                 f"{n_shards} equal expert-parallel shards: E must be divisible "
                 f"by the ep axis size"
             )
+        if k_shards <= 0 or k % (k_shards * 16):
+            raise ValueError(
+                f"cannot tensor-parallel-shard packed K={k} over tp={k_shards} "
+                f"devices: K must be divisible by tp*quant_block = "
+                f"{k_shards}*16 so every shard holds whole 16-element quant "
+                f"blocks (see docs/parallelism.md)"
+            )
         return PackedStackedTensor(
             codes=self.codes,
             scale_meta=self.scale_meta,
             tensor_scale=self.tensor_scale,
             sv_magnitudes=self.sv_magnitudes,
-            shape=(e // n_shards, k, n),
+            shape=(e // n_shards, k // k_shards, n),
         )
 
     def dequantize(self):

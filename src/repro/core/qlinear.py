@@ -175,16 +175,61 @@ class QuantizedLinear:
         return QuantizedLinear(w=w, b=b)
 
 
+def _tp_packed_matmul(x, w, entry):
+    """K-sharded packed matmul under the active mesh, or None when ineligible.
+
+    When a sharding context with a tp (model) axis is live and the format
+    published a K-shard plan (``shard_packed_fn``) that the weight's shape
+    satisfies, run the matmul inside ``shard_map``: each device localizes its
+    K/tp wire-row shard (``plan.localize`` rewrites the container's static
+    shape), launches the ordinary kernel on a per-shard grid over local K,
+    and the partial-sum exchange is fused into the epilogue as one last-dim
+    ``psum_scatter`` -- the output leaves the boundary N/tp-sharded on the
+    model axis, which is exactly the "ffn" activation layout
+    (docs/parallelism.md).  Returns None to mean "run the unsharded kernel".
+    """
+    from repro.parallel.sharding import get_ctx, packed_weight_specs
+
+    ctx = get_ctx()
+    if ctx is None or ctx.mesh is None:
+        return None
+    specs = packed_weight_specs(w, ctx)
+    if specs is None:
+        return None
+    axis = ctx.model_axis
+    tp = ctx.axis_size(axis)
+    _, localize = entry.shard_packed_fn(w, axis)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.ops import reduce_scatter_epilogue
+
+    io_spec = P(*([None] * (x.ndim - 1) + [axis]))  # K-sharded in, N/tp out
+
+    def body(x_l, w_l):
+        y = entry.matmul_kernel(x_l, localize(w_l, tp))
+        return reduce_scatter_epilogue(y, axis)
+
+    return shard_map(
+        body, mesh=ctx.mesh, in_specs=(io_spec, specs), out_specs=io_spec,
+        check_rep=False,
+    )(x, w)
+
+
 def qlinear(x, lin, cfg: QuantLike):
     """y = quant(x) @ quant(W) + b under the configured policy.
 
     Packed containers dispatch to their format's registered matmul kernel by
-    container type -- no string keys, no core edits for new formats.  A dense
-    weight under a ``packed`` spec runs DENSE: in packed mode the per-layer
-    rules decided at pack time which weights stay high precision (embed,
-    kv_b, first-layer exceptions, ...), and honoring that here keeps e.g.
-    the absorbed MLA decode -- which contracts the dense kv_b directly --
-    numerically consistent with prefill.
+    container type -- no string keys, no core edits for new formats.  Under
+    an active mesh with a tp (model) axis, eligible packed weights run
+    K-sharded with the reduce-scatter fused into the kernel epilogue
+    (``_tp_packed_matmul``).  A dense weight under a ``packed`` spec runs
+    DENSE: in packed mode the per-layer rules decided at pack time which
+    weights stay high precision (embed, kv_b, first-layer exceptions, ...),
+    and honoring that here keeps e.g. the absorbed MLA decode -- which
+    contracts the dense kv_b directly -- numerically consistent with
+    prefill.
     """
     w, b = (lin.w, lin.b) if isinstance(lin, QuantizedLinear) else (lin, None)
     entry = registry.packed_entry(w)
@@ -194,9 +239,13 @@ def qlinear(x, lin, cfg: QuantLike):
         pol = as_policy(cfg)
         if pol.act is not None:
             # W+A packed serving: dynamic activation quant ahead of the wire-
-            # format matmul, through the format's registered fused act kernel
+            # format matmul, through the format's registered fused act kernel.
+            # Runs BEFORE the tp shard_map: qdq blocks are 16 elements along
+            # K and K/tp is a 16-multiple, so no block straddles a shard.
             x = qdq_activation(x, pol)
-        y = entry.matmul_kernel(x, w)
+        y = _tp_packed_matmul(x, w, entry)
+        if y is None:
+            y = entry.matmul_kernel(x, w)
     else:
         pol = as_policy(cfg)
         spec = pol.weight

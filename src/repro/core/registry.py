@@ -67,14 +67,25 @@ class FormatEntry:
     grouped_matmul_kernel: Optional[Callable] = None  # (x (E,M,K), packed) -> y
     packed_stacked_type: Optional[type] = None  # stacked container class
     # expert-parallel partition plan for the stacked container
-    # (docs/parallelism.md): called as fn(bank, axis_name) and returns
+    # (docs/parallelism.md): called as fn(bank, axis_name, k_axis=None) and
+    # returns
     #   (specs, localize) where ``specs`` is a bank-structured pytree of
-    #   jax.sharding.PartitionSpec splitting every leaf on its expert dim,
-    #   and ``localize(bank, n_shards)`` rewrites the container's static
-    #   metadata for the E/n_shards shard a shard_map body receives.
+    #   jax.sharding.PartitionSpec splitting every leaf on its expert dim
+    #   (and, when ``k_axis`` names a mesh axis, its packed K/wire rows), and
+    #   ``localize(bank, n_shards, k_shards=1)`` rewrites the container's
+    #   static metadata for the (E/n_shards, K/k_shards) shard a shard_map
+    #   body receives.
     # Formats that register this inherit expert-parallel MoE serving
     # (parallel/sharding places the leaves, models/moe shard_maps the kernel).
-    shard_stacked_fn: Optional[Callable] = None  # (bank, axis) -> (specs, localize)
+    shard_stacked_fn: Optional[Callable] = None  # (bank, axis[, k_axis]) -> (specs, localize)
+    # tensor-parallel K-shard plan for the DENSE packed container -- the 2-D
+    # sibling of shard_stacked_fn: called as fn(pw, k_axis) and returns
+    # (specs, localize) splitting codes (K/2, N) and scale_meta (K/16, N) on
+    # their K rows over ``k_axis``, with ``localize(pw, k_shards)`` rewriting
+    # the static (K, N) shape for the K/k_shards slice a shard_map body
+    # receives.  qlinear fuses the partial-sum reduce-scatter into the matmul
+    # epilogue inside that shard_map (docs/parallelism.md#k-sharding).
+    shard_packed_fn: Optional[Callable] = None  # (pw, k_axis) -> (specs, localize)
     min_block_size: int = 1  # e.g. 32 for OCP MXFP4
     takes_scale_fmt: bool = False
     takes_special_values: bool = False
@@ -117,6 +128,7 @@ def register_format(
     grouped_matmul_kernel: Optional[Callable] = None,
     packed_stacked_type: Optional[type] = None,
     shard_stacked_fn: Optional[Callable] = None,
+    shard_packed_fn: Optional[Callable] = None,
     min_block_size: int = 1,
     overwrite: bool = False,
 ) -> FormatEntry:
@@ -137,6 +149,7 @@ def register_format(
         grouped_matmul_kernel=grouped_matmul_kernel,
         packed_stacked_type=packed_stacked_type,
         shard_stacked_fn=shard_stacked_fn,
+        shard_packed_fn=shard_packed_fn,
         min_block_size=min_block_size,
         takes_scale_fmt=takes_scale_fmt,
         takes_special_values=takes_special_values,
@@ -226,14 +239,19 @@ def _razer_grouped_matmul(x, pst):
     return ops.razer_grouped_matmul(x, pst)
 
 
-def _razer_shard_stacked(bank, axis):
-    """Expert-parallel partition plan for a ``PackedStackedTensor``.
+def _razer_shard_stacked(bank, axis, k_axis=None):
+    """Expert/tensor-parallel partition plan for a ``PackedStackedTensor``.
 
     Every leaf carries the expert dim first (after any scan-stacked layer
-    dims the engine restacked on top), so the plan is uniform: split that dim
-    over ``axis``, replicate everything else.  The packed (K, N) wire format
-    inside each expert row is never cut -- the invariant that lets a shard be
-    fed straight to the grouped kernel (docs/parallelism.md).
+    dims the engine restacked on top), so the expert plan is uniform: split
+    that dim over ``axis``, replicate everything else.  With ``k_axis`` the
+    packed K rows split too -- codes on their (K//2) byte rows, scale_meta on
+    its (K//16) block rows, per-expert tensor_scale replicated along K (it is
+    per TENSOR, not per block).  The packed wire format inside each
+    (local-K, N) slice is never cut mid-block: block scales live along K, so
+    a whole-quant-block K-shard is itself a valid wire-format tensor that
+    feeds straight into the grouped kernel on a local-K grid
+    (docs/parallelism.md#k-sharding).
     """
     import jax
     from jax.sharding import PartitionSpec
@@ -246,12 +264,45 @@ def _razer_shard_stacked(bank, axis):
     def spec(leaf):
         axes = [None] * leaf.ndim
         axes[lead] = axis
+        if k_axis is not None and leaf.ndim >= lead + 2:
+            # codes/scale_meta: (..., E, K-rows, N); tensor_scale (..., E)
+            # has no K dim and stays expert-sharded only
+            axes[lead + 1] = k_axis
         return PartitionSpec(*axes)
 
     specs = jax.tree_util.tree_map(spec, bank)
 
-    def localize(local_bank, n_shards: int):
-        return local_bank.local_shard(n_shards)
+    def localize(local_bank, n_shards: int, k_shards: int = 1):
+        return local_bank.local_shard(n_shards, k_shards)
+
+    return specs, localize
+
+
+def _razer_shard_packed(pw, k_axis):
+    """Tensor-parallel K-shard plan for a dense ``PackedRazerWeight``.
+
+    codes (K/2, N) and scale_meta (K/16, N) split their leading (K) rows over
+    ``k_axis``; the scalar tensor_scale replicates.  Scan-stacked leaves
+    (L, K/2, N) shift the K dim right by the extra leading dims.  Inside the
+    qlinear shard_map body each device holds the K/tp wire rows and runs the
+    SAME kernel on a local-K grid; ``localize`` rewrites the static (K, N)
+    shape for that slice (docs/parallelism.md#k-sharding).
+    """
+    import jax
+    from jax.sharding import PartitionSpec
+
+    lead = pw.codes.ndim - 2  # codes are logically (K//2, N)
+
+    def spec(leaf):
+        axes = [None] * leaf.ndim
+        if leaf.ndim >= lead + 2:  # codes / scale_meta; scalar tensor_scale skips
+            axes[lead] = k_axis
+        return PartitionSpec(*axes)
+
+    specs = jax.tree_util.tree_map(spec, pw)
+
+    def localize(local_pw, k_shards: int):
+        return local_pw.local_shard(k_shards)
 
     return specs, localize
 
@@ -290,6 +341,7 @@ def _register_builtins() -> None:
         grouped_matmul_kernel=_razer_grouped_matmul,
         packed_stacked_type=PackedStackedTensor,
         shard_stacked_fn=_razer_shard_stacked,
+        shard_packed_fn=_razer_shard_packed,
         overwrite=True,
     )
     register_format("mxfp4", mxfp4_quantize, min_block_size=32, overwrite=True)

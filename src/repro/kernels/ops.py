@@ -33,6 +33,9 @@ from .razer_quantize import razer_act_qdq_pallas
 __all__ = [
     "razer_matmul",
     "razer_grouped_matmul",
+    "razer_matmul_kshard",
+    "razer_grouped_matmul_kshard",
+    "reduce_scatter_epilogue",
     "razer_act_qdq",
     "razer_kv_attention",
     "razer_paged_kv_attention",
@@ -174,6 +177,48 @@ def razer_grouped_matmul(
     )
     y = y[:, :m] if pad else y
     return (y * pst.tensor_scale[:, None, None]).astype(x.dtype)
+
+
+def reduce_scatter_epilogue(y, axis_name):
+    """Fuse the K-shard partial-sum exchange into a matmul epilogue.
+
+    Inside ``shard_map``, a K-sharded packed matmul leaves each device holding
+    a full-N PARTIAL product; this turns those partials into each device's
+    N/tp output tile with ONE collective -- ``psum_scatter`` tiled on the last
+    dim -- instead of the psum + slice (or all-gather + matmul) a naive
+    lowering pays.  ``axis_name=None`` is the unsharded no-op; on a size-1
+    axis the scatter is the identity, so single-device results stay bit-exact
+    with the meshless path (docs/parallelism.md).
+    """
+    if axis_name is None:
+        return y
+    return jax.lax.psum_scatter(y, axis_name, scatter_dimension=y.ndim - 1, tiled=True)
+
+
+def razer_matmul_kshard(x, pw: PackedRazerWeight, *, axis_name,
+                        force_pallas: bool = False, interpret: bool | None = None):
+    """K-shard partial matmul + fused reduce-scatter: (..., local_K) -> (..., N/tp).
+
+    Call INSIDE ``shard_map``: ``pw`` is this device's localized K/tp shard
+    (``PackedRazerWeight.local_shard``) and x the matching activation slice.
+    The local launch is the ordinary ``razer_matmul`` -- the per-shard grid
+    falls out of the shard's smaller K -- and the tensor_scale multiply
+    commutes with the sum, so applying it to the partial product before the
+    exchange is exact."""
+    y = razer_matmul(x, pw, force_pallas=force_pallas, interpret=interpret)
+    return reduce_scatter_epilogue(y, axis_name)
+
+
+def razer_grouped_matmul_kshard(x, pst: PackedStackedTensor, *, axis_name,
+                                force_pallas: bool = False, interpret: bool | None = None):
+    """Grouped K-shard partial matmul + fused reduce-scatter epilogue.
+
+    x (local_E, M, local_K) @ local bank shard -> (local_E, M, N/tp); the
+    grouped sibling of ``razer_matmul_kshard`` (see there for the contract).
+    Composes with expert parallelism: E is already the local E/ep shard inside
+    the moe shard_map boundary, K is additionally this device's K/tp slice."""
+    y = razer_grouped_matmul(x, pst, force_pallas=force_pallas, interpret=interpret)
+    return reduce_scatter_epilogue(y, axis_name)
 
 
 def razer_act_qdq(x, *, svs=(5.0, -5.0), block: int = 16, force_pallas: bool = False, interpret: bool | None = None):

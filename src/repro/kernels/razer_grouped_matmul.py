@@ -33,7 +33,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .razer_matmul import _decode_weight_tile
 
-__all__ = ["razer_grouped_matmul_pallas"]
+__all__ = ["razer_grouped_matmul_pallas", "razer_grouped_matmul_kshard_pallas"]
 
 
 def _kernel(x_ref, codes_ref, sm_ref, o_ref, acc_ref, *, nsteps_k, block_k, m0, m1, compute_dtype):
@@ -104,3 +104,43 @@ def razer_grouped_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, codes, scale_meta)
+
+
+def razer_grouped_matmul_kshard_pallas(
+    x,
+    codes,
+    scale_meta,
+    *,
+    m0: float,
+    m1: float,
+    axis_name,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool = False,
+):
+    """Tensor-parallel K-shard launch over a LOCAL expert bank shard.
+
+    The grouped sibling of ``razer_matmul.razer_matmul_kshard_pallas``: call
+    INSIDE ``shard_map`` with x (local_E, M, local_K) and the bank's local
+    wire tensors; the grid is the ordinary (local_E, M/bm, N/bn, local_K/bk)
+    launch over LOCAL K, and the partial-sum exchange over ``axis_name`` is
+    fused into the epilogue as one last-dim-tiled ``psum_scatter``, returning
+    (local_E, M, N/tp).  Identity (bit-exact) on a size-1 axis.
+    """
+    y = razer_grouped_matmul_pallas(
+        x,
+        codes,
+        scale_meta,
+        m0=m0,
+        m1=m1,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        compute_dtype=compute_dtype,
+        interpret=interpret,
+    )
+    if axis_name is None:
+        return y
+    return jax.lax.psum_scatter(y, axis_name, scatter_dimension=y.ndim - 1, tiled=True)

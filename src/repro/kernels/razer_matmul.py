@@ -30,7 +30,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["razer_matmul_pallas"]
+__all__ = ["razer_matmul_pallas", "razer_matmul_kshard_pallas"]
 
 
 def _decode_e3m3_scale(code):
@@ -153,3 +153,45 @@ def razer_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, codes, scale_meta)
+
+
+def razer_matmul_kshard_pallas(
+    x,
+    codes,
+    scale_meta,
+    *,
+    m0: float,
+    m1: float,
+    axis_name,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    compute_dtype=jnp.bfloat16,
+    interpret: bool = False,
+):
+    """Tensor-parallel K-shard launch: per-shard grid + fused reduce-scatter.
+
+    Call INSIDE ``shard_map`` with this device's K/tp slice: x (M, local_K)
+    and the local wire-format tensors (local_K//2, N) / (local_K//16, N).
+    The grid is the ordinary (M/bm, N/bn, local_K/bk) launch over LOCAL K --
+    each device computes a full-N partial product, then the partial-sum
+    exchange is fused into the epilogue as one ``psum_scatter`` over
+    ``axis_name`` tiled on the last dim, returning (M, N/tp).  On a size-1
+    axis the scatter is the identity, so the result is bit-exact with the
+    unsharded launch (docs/parallelism.md).
+    """
+    y = razer_matmul_pallas(
+        x,
+        codes,
+        scale_meta,
+        m0=m0,
+        m1=m1,
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        compute_dtype=compute_dtype,
+        interpret=interpret,
+    )
+    if axis_name is None:
+        return y
+    return jax.lax.psum_scatter(y, axis_name, scatter_dimension=y.ndim - 1, tiled=True)

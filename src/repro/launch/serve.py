@@ -11,6 +11,17 @@ device; for MoE archs N must divide n_experts (checked up front).
     PYTHONPATH=src python -m repro.launch.serve --arch dbrx_132b --reduced \
         --packed --ep 4
 
+Tensor-parallel packed serving (docs/parallelism.md#k-sharding): ``--tp N``
+adds a model axis that K-shards every eligible packed weight -- each device
+holds K/N wire rows and the partial-sum reduce-scatter is fused into the
+kernel epilogue; composes with ``--ep`` on a 2-D mesh.  For packed runs N
+must split every reduction dim into whole 16-element quant blocks (checked
+up front):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --arch dbrx_132b --reduced \
+        --packed --ep 2 --tp 2
+
 Continuous batching (docs/serving.md): ``--continuous`` switches from one
 static batch to the scheduler-driven request-stream mode over the paged
 RaZeR-quantized KV pool -- requests arrive on a Poisson trace (``--rate``
@@ -127,15 +138,21 @@ def main(argv=None):
             params = full["params"]
 
     mesh = None
-    if args.ep:
+    if args.ep or args.tp > 1:
         from repro.launch.mesh import make_serving_mesh
-        from repro.parallel.sharding import expert_shard_size
+        from repro.parallel.sharding import expert_shard_size, kshard_size
 
         if cfg.moe and args.packed and args.ep > 1:
             # fail fast with the divisibility rule instead of silently
             # replicating a bank the user asked to shard
             expert_shard_size(cfg.n_experts, args.ep)
-        mesh = make_serving_mesh(ep=args.ep, tp=args.tp)
+        if args.packed and args.tp > 1:
+            # same fail-fast for the tp axis: every packed reduction dim the
+            # K-shard path touches (d_model everywhere; the expert trio also
+            # reduces over the ffn width) must split into whole quant blocks
+            kshard_size(cfg.d_model, args.tp)
+            kshard_size(cfg.moe_d_ff if cfg.moe else cfg.d_ff, args.tp)
+        mesh = make_serving_mesh(ep=args.ep or None, tp=args.tp)
 
     scfg = ServeConfig(
         max_len=args.max_len,

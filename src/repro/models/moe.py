@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from repro.core import registry
 from repro.core.policy import as_policy
 from repro.core.qlinear import QuantLike, qlinear
-from repro.parallel.sharding import P, get_ctx, shard_activation
+from repro.parallel.sharding import P, get_ctx, shard_activation, stacked_plan
 
 from .config import ArchConfig
 from .layers import DEFAULT_QUANT, dense_init, swiglu, swiglu_init
@@ -108,75 +108,105 @@ def _group_combine(h, slot_expert, slot_pos, keep, slot_token, topw, tg: int):
     return out.at[slot_token].add(slots * w[:, None].astype(h.dtype))
 
 
-def _expert_parallel_ffn(buf, we, gentry, ctx, ep: int):
-    """Packed grouped FFN under shard_map over the ep (data) axis.
+def _expert_parallel_ffn(buf, we, gentry, ctx, ep: int, tp: int = 1):
+    """Packed grouped FFN under shard_map over the ep (data) x tp (model) axes.
 
-    buf: (g, e, cap, d) dispatch buffer.  Each device holds only its E/ep
-    rows of the packed gate/up/down banks (the registry plan
+    buf: (g, e, cap, d) dispatch buffer.  Each device holds only its
+    E/ep x K/tp tile of the packed gate/up/down banks (the registry plan
     ``shard_stacked_fn`` both places the leaves and localizes the container
     metadata inside the body) and launches the grouped kernel on a local
-    (E/ep, M/bm, N/bn, K/bk) grid.  The wire format is untouched: a bank
-    shard is byte-identical to packing that E/ep sub-bank directly
-    (docs/parallelism.md).
+    (E/ep, M/bm, N/bn, (K/tp)/bk) grid.  The wire format is untouched: a
+    bank shard is byte-identical to packing that E/ep x K/tp sub-bank
+    directly (docs/parallelism.md).
 
-    Two token-movement strategies, both keeping the banks sharded:
-      * ``g % ep == 0`` (prefill / large batches): the group dim shards over
-        ep and tokens reach their experts with the same all-to-all
-        dispatch/combine the dense einsum gets from GSPMD.
-      * otherwise (decode: t, and so g, smaller than ep): the buffer is tiny
-        and replicated; each device slices out its own experts' slots,
-        computes them, and one activation all-gather rebuilds the buffer --
-        never a gather of the (much larger) packed bank.
+    Under tp > 1 the buffer's d dim enters ALREADY sharded on the model axis
+    (the "moe_buf" activation layout) and is never gathered: each grouped
+    matmul computes a full-N partial product over its local K slice and the
+    partial-sum exchange is fused into the epilogue as one last-dim
+    ``psum_scatter`` -- gate/up scatter over f (feeding silu*mul its f/tp
+    tile, which is exactly down's K-shard), down scatters back over d, so
+    the output leaves d-sharded just like the input.
+
+    Token-movement strategies over ep, both keeping the banks sharded:
+      * ``ep > 1 and g % ep == 0`` (prefill / large batches): the group dim
+        shards over ep and tokens reach their experts with the same
+        all-to-all dispatch/combine the dense einsum gets from GSPMD.
+      * ``ep > 1`` otherwise (decode: t, and so g, smaller than ep): the
+        buffer is tiny and replicated over ep; each device slices out its
+        own experts' slots, computes them, and one activation all-gather
+        rebuilds the buffer -- never a gather of the (much larger) bank.
+      * ``ep == 1`` (pure tp): every device computes all E experts over its
+        K/tp slice; the only collectives are the two fused psum_scatters.
 
     Single-device meshes never reach this function -- ``moe_forward`` gates
-    on ep > 1 and otherwise runs the unsharded launch, so a (1, tp) mesh is
-    bit-exactly the pre-sharding path.
+    on ep > 1 or tp > 1 and otherwise runs the unsharded launch.
     """
     from jax.experimental.shard_map import shard_map
 
+    from repro.kernels.ops import reduce_scatter_epilogue
     from repro.parallel.collectives import (
         combine_from_expert_shards,
         dispatch_to_expert_shards,
     )
 
-    axis = ctx.data_axis
+    eax = ctx.data_axis if ep > 1 else None
+    tax = ctx.model_axis if tp > 1 else None
     g, e, cap, d = buf.shape
-    local_e = e // ep
     grouped_mm = gentry.grouped_matmul_kernel
-    gateup_specs, localize = gentry.shard_stacked_fn(we["gate"], axis)
-    down_specs, _ = gentry.shard_stacked_fn(we["down"], axis)
-    all_to_all = g % ep == 0
+    (gateup_specs, localize), k_ok = stacked_plan(gentry, we["gate"], eax, tax)
+    if not k_ok:  # plan predates the K-shard hook: degrade to ep-only
+        tax, tp = None, 1
+    (down_specs, _), _ = stacked_plan(gentry, we["down"], eax, tax)
+    local_e = e // ep
+    dl = d // tp  # buf's local d width under the model axis
+    all_to_all = ep > 1 and g % ep == 0
 
     def local_ffn(xe, gate_l, up_l, down_l):
-        hg = grouped_mm(xe, gate_l)
-        hu = grouped_mm(xe, up_l)
+        # under tp each matmul yields a full-N PARTIAL over the local K
+        # slice; the reduce-scatter epilogue hands silu*mul its f/tp tile
+        # (== down's K-shard) and the d output back in buf layout
+        hg = reduce_scatter_epilogue(grouped_mm(xe, gate_l), tax)
+        hu = reduce_scatter_epilogue(grouped_mm(xe, up_l), tax)
         h = jax.nn.silu(hg) * hu
-        return grouped_mm(h, down_l)  # (e/ep, g*cap, d)
+        return reduce_scatter_epilogue(grouped_mm(h, down_l), tax)  # (e/ep, g*cap, d/tp)
 
     def ffn_a2a(buf_l, gate_l, up_l, down_l):
-        gate_l, up_l, down_l = (localize(b, ep) for b in (gate_l, up_l, down_l))
-        x = dispatch_to_expert_shards(buf_l, axis)  # (g, e/ep, cap, d)
-        xe = x.transpose(1, 0, 2, 3).reshape(local_e, g * cap, d)
+        gate_l, up_l, down_l = (localize(b, ep, tp) for b in (gate_l, up_l, down_l))
+        x = dispatch_to_expert_shards(buf_l, eax)  # (g, e/ep, cap, d/tp)
+        xe = x.transpose(1, 0, 2, 3).reshape(local_e, g * cap, dl)
         ho = local_ffn(xe, gate_l, up_l, down_l)
-        ho = ho.reshape(local_e, g, cap, d).transpose(1, 0, 2, 3)
-        return combine_from_expert_shards(ho, axis)  # (g/ep, e, cap, d)
+        ho = ho.reshape(local_e, g, cap, dl).transpose(1, 0, 2, 3)
+        return combine_from_expert_shards(ho, eax)  # (g/ep, e, cap, d/tp)
 
     def ffn_replicated_tokens(buf_r, gate_l, up_l, down_l):
-        gate_l, up_l, down_l = (localize(b, ep) for b in (gate_l, up_l, down_l))
-        idx = jax.lax.axis_index(axis)
-        # this device's experts' slots out of the (replicated) full buffer;
+        gate_l, up_l, down_l = (localize(b, ep, tp) for b in (gate_l, up_l, down_l))
+        idx = jax.lax.axis_index(eax)
+        # this device's experts' slots out of the (ep-replicated) buffer;
         # slice order matches shard_map's contiguous bank-leaf sharding
         bl = jax.lax.dynamic_slice_in_dim(buf_r, idx * local_e, local_e, axis=1)
-        xe = bl.transpose(1, 0, 2, 3).reshape(local_e, g * cap, d)
-        ho = local_ffn(xe, gate_l, up_l, down_l).reshape(local_e, g, cap, d)
-        full = jax.lax.all_gather(ho, axis, axis=0, tiled=True)  # (e, g, cap, d)
+        xe = bl.transpose(1, 0, 2, 3).reshape(local_e, g * cap, dl)
+        ho = local_ffn(xe, gate_l, up_l, down_l).reshape(local_e, g, cap, dl)
+        full = jax.lax.all_gather(ho, eax, axis=0, tiled=True)  # (e, g, cap, d/tp)
         return full.transpose(1, 0, 2, 3)
 
+    def ffn_tp_only(buf_r, gate_l, up_l, down_l):
+        gate_l, up_l, down_l = (localize(b, 1, tp) for b in (gate_l, up_l, down_l))
+        xe = buf_r.transpose(1, 0, 2, 3).reshape(e, g * cap, dl)
+        ho = local_ffn(xe, gate_l, up_l, down_l).reshape(e, g, cap, dl)
+        return ho.transpose(1, 0, 2, 3)
+
+    if eax is None:
+        body, g_ax = ffn_tp_only, None
+    elif all_to_all:
+        body, g_ax = ffn_a2a, eax
+    else:
+        body, g_ax = ffn_replicated_tokens, None
+    buf_spec = P(g_ax, None, None, tax)
     return shard_map(
-        ffn_a2a if all_to_all else ffn_replicated_tokens,
+        body,
         mesh=ctx.mesh,
-        in_specs=(P(axis) if all_to_all else P(), gateup_specs, gateup_specs, down_specs),
-        out_specs=P(axis) if all_to_all else P(),
+        in_specs=(buf_spec, gateup_specs, gateup_specs, down_specs),
+        out_specs=buf_spec,
         check_rep=False,
     )(buf, we["gate"], we["up"], we["down"])
 
@@ -236,15 +266,21 @@ def moe_forward(
                 f"grouped_matmul_kernel; cannot run the packed expert einsum"
             )
         ctx = get_ctx()
-        ep = (
-            ctx.axis_size(ctx.data_axis)
-            if ctx is not None and ctx.mesh is not None and ctx.data_axis
-            else 1
-        )
-        if ep > 1 and gentry.shard_stacked_fn is not None and e % ep == 0:
-            # expert-parallel: shard_map the grouped kernel over the ep axis,
-            # E/ep bank rows + a local-E grid per device (docs/parallelism.md)
-            hout = _expert_parallel_ffn(buf, we, gentry, ctx, ep)
+        on_mesh = ctx is not None and ctx.mesh is not None
+        ep = ctx.axis_size(ctx.data_axis) if on_mesh and ctx.data_axis else 1
+        tp = ctx.axis_size(ctx.model_axis) if on_mesh and ctx.model_axis else 1
+        f = we["gate"].shape[2]
+        ep_eff = ep if ep > 1 and e % ep == 0 else 1
+        # K-shard eligibility for the whole trio: gate/up reduce over d,
+        # down over f, and each psum_scatter tiles the other dim -- so both
+        # must split into whole 16-element quant blocks per device
+        tp_eff = tp if tp > 1 and d % (tp * 16) == 0 and f % (tp * 16) == 0 else 1
+        if gentry.shard_stacked_fn is not None and (ep_eff > 1 or tp_eff > 1):
+            # expert-parallel and/or tensor-parallel: shard_map the grouped
+            # kernel over the ep x tp axes, E/ep x K/tp bank tiles + a
+            # local-E grid over local K per device, partial-sum
+            # reduce-scatter fused into the epilogue (docs/parallelism.md)
+            hout = _expert_parallel_ffn(buf, we, gentry, ctx, ep_eff, tp_eff)
         else:
             # unsharded launch (single device, ep=1 mesh, or E not divisible
             # by ep -- then param placement replicated the bank): flatten

@@ -28,6 +28,7 @@ validator both layers share.
 from __future__ import annotations
 
 import contextlib
+import inspect
 import re
 import threading
 from typing import Optional, Sequence
@@ -43,7 +44,10 @@ __all__ = [
     "param_sharding_tree",
     "input_sharding",
     "expert_shard_size",
+    "kshard_size",
     "stacked_bank_specs",
+    "stacked_plan",
+    "packed_weight_specs",
     "get_ctx",
     "P",
 ]
@@ -198,15 +202,67 @@ def expert_shard_size(e: int, ep: int) -> int:
     return e // ep
 
 
-def stacked_bank_specs(bank, ctx_or_mesh, *, strict: bool = False):
-    """PartitionSpecs splitting a stacked packed bank over the ep axis.
+def kshard_size(k: int, tp: int, *, quant_block: int = 16) -> int:
+    """local_K = K // tp for a tensor-parallel K-shard, or a clear error.
 
-    Asks the bank's format registry entry for its expert-parallel partition
-    plan (``shard_stacked_fn``); returns the bank-structured pytree of
-    PartitionSpecs, or None when the bank cannot shard -- no registered plan,
-    no data (ep) axis on the mesh, or E not divisible by the axis size
-    (``strict=True`` raises the ``expert_shard_size`` error instead of
-    returning None for the divisibility case).
+    The tp sibling of ``expert_shard_size`` and the single divisibility
+    validator shared by parameter placement (``packed_weight_specs`` /
+    ``stacked_bank_specs``), the serve driver (``launch/serve.py --tp``) and
+    the packed containers' ``local_shard``: block scales live along K, so a
+    packed weight can only split between whole ``quant_block``-element quant
+    blocks -- K/tp must be a block multiple.
+    """
+    if tp <= 0:
+        raise ValueError(f"tensor-parallel axis size must be positive, got tp={tp}")
+    if k % (tp * quant_block):
+        raise ValueError(
+            f"cannot tensor-parallel-shard the packed K dimension K={k} over "
+            f"tp={tp} devices: K must be divisible by tp*quant_block = "
+            f"{tp}*{quant_block} = {tp * quant_block} so every shard holds "
+            f"whole {quant_block}-element quant blocks (block scales live "
+            f"along K) -- choose a tp (model) axis size that divides "
+            f"K/{quant_block}, or leave the weight replicated "
+            f"(see docs/parallelism.md)"
+        )
+    return k // tp
+
+
+def stacked_plan(entry, bank, axis, k_axis=None):
+    """Call a format's ``shard_stacked_fn``, forwarding ``k_axis`` only when
+    the plan accepts it (third-party plans may predate the K-shard hook).
+
+    Returns ``((specs, localize), k_applied)``: ``k_applied`` is False when a
+    K-shard was requested but the plan is ep-only, so callers must treat the
+    bank as K-replicated (tp = 1) for that weight.
+    """
+    fn = entry.shard_stacked_fn
+    if k_axis is None:
+        return fn(bank, axis), True
+    try:
+        params = inspect.signature(fn).parameters
+        takes_k = "k_axis" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+        )
+    except (TypeError, ValueError):  # builtins / C callables: be permissive
+        takes_k = True
+    if takes_k:
+        return fn(bank, axis, k_axis=k_axis), True
+    return fn(bank, axis), False
+
+
+def stacked_bank_specs(bank, ctx_or_mesh, *, strict: bool = False):
+    """PartitionSpecs splitting a stacked packed bank over the ep axis (and,
+    when the packed K dim divides, the tp axis too).
+
+    Asks the bank's format registry entry for its partition plan
+    (``shard_stacked_fn``); returns the bank-structured pytree of
+    PartitionSpecs, or None when the bank cannot shard at all -- no
+    registered plan, no data (ep) axis on the mesh, or E not divisible by the
+    axis size.  On a 2-D ep x tp mesh the K (wire-row) dim additionally
+    splits over the model axis when ``K % (tp * quant_block) == 0``; an
+    indivisible K degrades to the ep-only plan.  ``strict=True`` raises the
+    ``expert_shard_size`` / ``kshard_size`` error instead of silently
+    degrading for the respective divisibility case.
     """
     from repro.core import registry
 
@@ -218,12 +274,53 @@ def stacked_bank_specs(bank, ctx_or_mesh, *, strict: bool = False):
     if ax is None:
         return None
     ep = ctx.axis_size(ax)
-    e = bank.shape[0]
+    e, k = bank.shape[0], bank.shape[1]
     if e % ep:
         if strict:
             expert_shard_size(e, ep)
         return None
-    specs, _ = entry.shard_stacked_fn(bank, ax)
+    k_ax = None
+    tp = ctx.axis_size(ctx.model_axis)
+    if ctx.model_axis is not None and tp > 1:
+        if k % (tp * 16) == 0:
+            k_ax = ctx.model_axis
+        elif strict:
+            kshard_size(k, tp)
+    (specs, _), _ = stacked_plan(entry, bank, ax, k_ax)
+    return specs
+
+
+def packed_weight_specs(pw, ctx_or_mesh, *, strict: bool = False):
+    """PartitionSpecs K-sharding a dense packed weight over the tp axis.
+
+    The 2-D sibling of ``stacked_bank_specs``: asks the weight's format entry
+    for its K-shard plan (``shard_packed_fn``) and returns the
+    container-structured pytree of PartitionSpecs, or None when the weight
+    cannot K-shard -- no registered plan, no model (tp) axis or tp == 1, K
+    not a multiple of ``tp * quant_block`` (``strict=True`` raises the
+    ``kshard_size`` error for this case), or N not divisible by tp (the
+    fused reduce-scatter epilogue tiles the N outputs over the axis).
+    """
+    from repro.core import registry
+
+    entry = registry.packed_entry(pw)
+    if entry is None or entry.shard_packed_fn is None:
+        return None
+    ctx = ctx_or_mesh if isinstance(ctx_or_mesh, _Ctx) else _Ctx(ctx_or_mesh)
+    ax = ctx.model_axis
+    if ax is None:
+        return None
+    tp = ctx.axis_size(ax)
+    if tp <= 1:
+        return None
+    k, n = pw.shape
+    if k % (tp * 16):
+        if strict:
+            kshard_size(k, tp)
+        return None
+    if n % tp:
+        return None
+    specs, _ = entry.shard_packed_fn(pw, ax)
     return specs
 
 
@@ -240,12 +337,14 @@ def param_sharding_tree(params, mesh: Mesh, scan_stacked_prefixes: Sequence[str]
     NamedShardings.
 
     Stacked packed expert banks (registry ``packed_stacked_type`` containers)
-    are placed by their format's expert-parallel plan: every leaf splits its
-    expert dim over the ep (data) axis, so each device holds only E/ep rows
-    of codes/scale_meta/tensor_scale.  When the bank cannot shard (no ep
-    axis, or E not divisible) it replicates whole -- the grouped kernel
-    consumes whole bank leaves, so partial per-child sharding would only buy
-    a gather in front of the custom call.
+    are placed by their format's partition plan: every leaf splits its expert
+    dim over the ep (data) axis (and, on a 2-D ep x tp mesh with a divisible
+    K, its wire-row dim over the model axis), so each device holds only the
+    E/ep x K/tp tile of codes/scale_meta.  Dense packed weights K-shard over
+    the tp axis via the format's ``shard_packed_fn`` when eligible.  When a
+    container cannot shard (no axis, or a dim not divisible) it replicates
+    whole -- the packed kernels consume whole container leaves, so partial
+    per-child sharding would only buy a gather in front of the custom call.
     """
     from repro.core import registry
 
@@ -266,8 +365,17 @@ def param_sharding_tree(params, mesh: Mesh, scan_stacked_prefixes: Sequence[str]
                 return jax.tree_util.tree_map(
                     lambda s: NamedSharding(mesh, s), especs
                 )
-            # composite pytree node (e.g. PackedRazerWeight): shard each child
-            # by its own shape under the same path rules
+            # dense packed weight (e.g. PackedRazerWeight): K-shard over the
+            # tp (model) axis when the format has a plan and K divides --
+            # each device holds K/tp wire rows, matching the qlinear
+            # shard_map boundary's in_specs so placement is exchange-free
+            kspecs = packed_weight_specs(tree, ctx)
+            if kspecs is not None:
+                return jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), kspecs
+                )
+            # other composite pytree nodes: shard each child by its own
+            # shape under the same path rules
             return jax.tree_util.tree_map(
                 lambda child: NamedSharding(
                     mesh, param_spec(prefix, child.shape, ctx, scan_stacked=stacked)

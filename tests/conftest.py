@@ -19,3 +19,26 @@ def ep_mesh():
     if len(jax.devices()) < 8:
         pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
     return jax.make_mesh((8, 1), ("data", "model"))
+
+
+@pytest.fixture
+def tp_mesh():
+    """A tp=2 mesh: (2, 2) ep x tp with >=4 devices, (1, 2) with >=2.
+
+    Adaptive so the fused reduce-scatter epilogue path runs in every CI
+    device leg that has a second device; with 4+ the same fixture also
+    exercises the 2-D ep x tp composition."""
+    n = len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    if n >= 2:
+        return jax.make_mesh((1, 2), ("data", "model"))
+    pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=2 (or more)")
+
+
+@pytest.fixture
+def eptp_mesh():
+    """The full 2-D (4, 2) ep x tp host-CPU mesh (8 devices)."""
+    if len(jax.devices()) < 8:
+        pytest.skip("needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    return jax.make_mesh((4, 2), ("data", "model"))

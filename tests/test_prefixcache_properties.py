@@ -1,0 +1,303 @@
+"""Property-based prefix-cache tests: random insert/match/evict/refcount
+interleavings vs a pure-Python radix oracle.
+
+``serving/prefixcache.py`` layers three interacting mechanisms on the page
+pool -- a radix tree of page-size token chunks, pool refcounts (one per
+cached node, plus per-sequence co-ownership), and a lazy-deletion min-heap
+LRU with cascading leaf eviction.  Example-based tests pin the common
+sequences; these tests drive hypothesis-generated interleavings against an
+oracle that models the CONTRACT directly:
+
+  * the radix trees are structurally identical, node for node, INCLUDING
+    every node's LRU timestamp (the oracle mirrors each clock tick, which is
+    what lets it predict eviction order);
+  * every owned page's pool refcount equals its owner count (sequences
+    holding it + cache nodes caching it);
+  * ``match`` returns exactly the oracle's walk -- shared full pages, the
+    best partial (COW) child -- and is clamped to ``len(prompt) - 1``;
+  * ``evict`` frees victims in exact greedy-LRU order over the
+    currently-evictable leaves, cascading to exposed parents, observable
+    through the listener's ``("evict", path)`` event stream;
+  * ``evictable_pages`` / ``cached_pages`` / hit-stats counters agree.
+
+The oracle's greedy "evict the min-``last_used`` currently-evictable leaf,
+repeat" is equivalent to the implementation's heap-with-stash because
+parents always carry OLDER timestamps than their children (insert and match
+bump root-to-leaf) and refcounts cannot change mid-pass -- so a node only
+becomes evictable during a pass by losing its last child, exactly the case
+the heap's cascade re-push covers.
+
+Mirrors ``tests/test_pool_properties.py``; runs only where hypothesis is
+installed (CI), skipped otherwise via the ``tests/_hyp.py`` shim.
+"""
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs import get_config
+from repro.serving.pagepool import KVPagePool, PagePoolConfig
+from repro.serving.prefixcache import PrefixCache
+
+# tiny pool + binary token vocabulary: page_size 2, prompts up to 8 tokens
+# drawn from {0, 1} make prefix collisions, partial (COW) hits, clamp
+# boundaries and pool exhaustion all reachable within a few ops
+PS = 2
+NUM_PAGES = 12
+MAX_LEN = 8
+SEQ_IDS = (0, 1, 2, 3)
+
+
+def _cfg():
+    return get_config("llama3_2_3b").reduced()
+
+
+def _pages_for(n):
+    return -(-n // PS)
+
+
+class OracleRadix:
+    """Pure-Python model of the prefix-cache contract.
+
+    Nodes are keyed by their root-to-node chunk path (what the listener
+    reports), holding the physical page and a mirrored LRU timestamp.  The
+    oracle advances its clock exactly when the implementation does -- one
+    tick per node bump, plus one consumed tick per cascade re-push inside
+    ``evict`` -- so timestamps (and therefore LRU order) match tick for
+    tick."""
+
+    def __init__(self):
+        self.nodes = {}      # path (tuple of chunk tuples) -> {page, last_used}
+        self.clock = 0
+        self.seq_pages = {}  # sid -> [pages] (live sequences' co-ownership)
+        self.events = []     # predicted listener ("insert"/"evict", path) stream
+        self.lookups = self.hits = self.hit_tokens = self.evictions = 0
+
+    def _tick(self):
+        self.clock += 1
+        return self.clock
+
+    def _bump(self, path):
+        self.nodes[path]["last_used"] = self._tick()
+
+    def _children(self, path):
+        d = len(path) + 1
+        return [p for p in self.nodes if len(p) == d and p[:len(path)] == path]
+
+    # -- ownership -----------------------------------------------------------
+    def owner_count(self, pg):
+        n = sum(pages.count(pg) for pages in self.seq_pages.values())
+        return n + sum(1 for nd in self.nodes.values() if nd["page"] == pg)
+
+    def pages_owned(self):
+        owned = set()
+        for pages in self.seq_pages.values():
+            owned.update(pages)
+        owned.update(nd["page"] for nd in self.nodes.values())
+        return owned
+
+    # -- modelled operations ---------------------------------------------------
+    def match(self, prompt):
+        """(pages, cow_page, partial, full_tokens) for the longest cached
+        prefix, clamped to len(prompt) - 1; bumps exactly what the real
+        match bumps (walked children + the best partial child)."""
+        limit = len(prompt) - 1
+        path, pages, depth = (), [], 0
+        while (depth + 1) * PS <= limit:
+            child = path + (tuple(prompt[depth * PS:(depth + 1) * PS]),)
+            if child not in self.nodes:
+                break
+            self._bump(child)
+            pages.append(self.nodes[child]["page"])
+            path = child
+            depth += 1
+        cow_page, partial, best = None, 0, None
+        rest = tuple(prompt[depth * PS: limit])
+        if rest:
+            # node creation order == child-dict insertion order, so iterating
+            # self.nodes reproduces the real first-strict-max tie-breaking
+            for child in self._children(path):
+                chunk = child[-1]
+                m = 0
+                while m < len(rest) and chunk[m] == rest[m]:
+                    m += 1
+                if m > partial:
+                    cow_page, partial, best = self.nodes[child]["page"], m, child
+            if partial:
+                self._bump(best)
+        return tuple(pages), cow_page, partial, depth * PS
+
+    def insert(self, prompt, seq_pages):
+        path = ()
+        for i in range(len(prompt) // PS):
+            child = path + (tuple(prompt[i * PS:(i + 1) * PS]),)
+            if child not in self.nodes:
+                # existing chunks keep their ORIGINAL page even when the
+                # inserting sequence holds a different (private) one
+                self.nodes[child] = {"page": seq_pages[i], "last_used": 0}
+            self._bump(child)
+            path = child
+        if len(prompt) >= PS:
+            self.events.append(("insert", path))
+
+    def record(self, cached_len):
+        self.lookups += 1
+        if cached_len:
+            self.hits += 1
+            self.hit_tokens += cached_len
+
+    def evict(self, n_pages, protect=()):
+        """Greedy LRU over currently-evictable leaves, cascading: the
+        predicted victim sequence (and so the listener event order)."""
+        protect = set(protect)
+        freed = 0
+        while freed < n_pages:
+            cands = [
+                p for p, nd in self.nodes.items()
+                if not self._children(p)
+                and nd["page"] not in protect
+                and self.owner_count(nd["page"]) == 1
+            ]
+            if not cands:
+                break
+            victim = min(cands, key=lambda p: self.nodes[p]["last_used"])
+            self.events.append(("evict", victim))
+            del self.nodes[victim]
+            self.evictions += 1
+            freed += 1
+            parent = victim[:-1]
+            if parent and not self._children(parent):
+                # the heap re-pushes the exposed parent with a fresh tiebreak
+                # tick; consume it so later timestamps stay aligned
+                self._tick()
+        return freed
+
+    # -- invariants ------------------------------------------------------------
+    def check_against(self, cache: PrefixCache, pool: KVPagePool, events):
+        # structural equality, page for page, timestamp for timestamp
+        real = {}
+        stack = [(cache.root, ())]
+        while stack:
+            node, path = stack.pop()
+            for chunk, child in node.children.items():
+                cpath = path + (chunk,)
+                real[cpath] = (child.page, child.last_used)
+                stack.append((child, cpath))
+        want = {p: (nd["page"], nd["last_used"]) for p, nd in self.nodes.items()}
+        assert real == want
+        assert cache.cached_pages == len(self.nodes)
+        # refcount == owner count for every owned page; the rest are free
+        owned = self.pages_owned()
+        for pg in owned:
+            assert pool.refcount(pg) == self.owner_count(pg), (
+                f"page {pg}: refcount {pool.refcount(pg)} != "
+                f"{self.owner_count(pg)} owners")
+        assert pool.num_free_pages == NUM_PAGES - len(owned)
+        # evictable = cache-only (refcount-1) nodes; pinned nodes are
+        # prefix-closed so this count is the reclaimable total
+        assert cache.evictable_pages() == sum(
+            1 for nd in self.nodes.values() if self.owner_count(nd["page"]) == 1)
+        # the listener saw exactly the predicted event stream, in order
+        assert events == self.events
+        assert (cache.lookups, cache.hits, cache.hit_tokens, cache.evictions) == (
+            self.lookups, self.hits, self.hit_tokens, self.evictions)
+
+
+def _prompt(length, bits):
+    return [(bits >> i) & 1 for i in range(length)]
+
+
+def _apply(cache, pool, oracle, op):
+    """Interpret one drawn op; applicability is decided from the ORACLE state
+    so both sides always take the same path (pool-properties idiom)."""
+    kind, a, b, c = op
+    sid = SEQ_IDS[a % len(SEQ_IDS)]
+    if kind in (0, 1):  # 0 = admit (match + allocate + insert), 1 = match only
+        n = 1 + b % MAX_LEN
+        prompt = _prompt(n, c)
+        if kind == 0 and sid in oracle.seq_pages:
+            return
+        m = cache.match(prompt)
+        opages, ocow, opartial, ofull = oracle.match(prompt)
+        # match-clamp + exactness invariants
+        assert m.pages == opages
+        assert m.cow_page == ocow
+        assert m.partial == opartial
+        assert m.cached_len == ofull + opartial
+        assert m.cached_len <= len(prompt) - 1
+        if kind == 1:
+            return
+        fresh = _pages_for(n) - len(m.pages)
+        if fresh > pool.num_free_pages:
+            return  # admission blocked; the match bumps still happened
+        pages = pool.allocate(sid, n, shared=list(m.pages), cow_src=m.cow_page)
+        pool.flush_forks(sid)  # the engine flushes before this prefill reads
+        oracle.seq_pages[sid] = list(pages)
+        cache.record(m)
+        oracle.record(m.cached_len)
+        cache.insert(prompt, pages)
+        oracle.insert(prompt, pages)
+    elif kind == 2:  # release a donor: its cached pages must survive
+        if sid not in oracle.seq_pages:
+            return
+        pool.release(sid)
+        del oracle.seq_pages[sid]
+    elif kind == 3:  # evict, sometimes protecting a live sequence's pages
+        n = 1 + b % 4
+        live = sorted(oracle.seq_pages)
+        protect = tuple(oracle.seq_pages[live[c % len(live)]]) if (c % 2 and live) else ()
+        freed = cache.evict(n, protect)
+        assert freed == oracle.evict(n, protect)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+class TestPrefixCacheProperties:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 63),
+                              st.integers(0, 63), st.integers(0, 255)),
+                    min_size=1, max_size=40))
+    def test_interleavings_match_oracle(self, ops):
+        events = []
+        pool = KVPagePool(_cfg(), PagePoolConfig(
+            num_pages=NUM_PAGES, page_size=PS, max_len=MAX_LEN))
+        cache = PrefixCache(pool, listener=lambda ev, path: events.append((ev, path)))
+        oracle = OracleRadix()
+        oracle.check_against(cache, pool, events)
+        for op in ops:
+            _apply(cache, pool, oracle, op)
+            oracle.check_against(cache, pool, events)
+        # drain: release every sequence, then one big evict must cascade the
+        # whole tree away and return the pool to pristine
+        for sid in sorted(oracle.seq_pages):
+            pool.release(sid)
+            del oracle.seq_pages[sid]
+        n_nodes = len(oracle.nodes)
+        freed = cache.evict(NUM_PAGES)
+        assert freed == oracle.evict(NUM_PAGES) == n_nodes
+        oracle.check_against(cache, pool, events)
+        assert cache.cached_pages == 0
+        assert pool.num_free_pages == NUM_PAGES
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(2, MAX_LEN), st.integers(0, 255))
+    def test_match_never_returns_full_prompt(self, n, bits):
+        """The clamp invariant in isolation: even when the EXACT prompt is
+        cached, at least one suffix token is left to recompute."""
+        pool = KVPagePool(_cfg(), PagePoolConfig(
+            num_pages=NUM_PAGES, page_size=PS, max_len=MAX_LEN))
+        cache = PrefixCache(pool)
+        prompt = _prompt(n, bits)
+        pages = pool.allocate(0, n)
+        cache.insert(prompt, pages)
+        m = cache.match(prompt)
+        assert m.cached_len <= n - 1
+        assert len(m.pages) * PS + m.partial == m.cached_len
+
+
+def test_prefixcache_property_suite_collected():
+    """The hypothesis suite must not silently vanish: when hypothesis is
+    available (CI installs it via the [dev] extra) the class above runs; this
+    sentinel documents the expectation for minimal local images."""
+    if HAVE_HYPOTHESIS:
+        assert TestPrefixCacheProperties is not None
+    else:
+        pytest.skip("hypothesis not installed: property suite skipped by shim")
