@@ -49,6 +49,7 @@ def main(argv=None) -> None:
         ("serving_prefix_cache", serving_bench.serving_prefix_cache),
         ("serving_disagg", serving_bench.serving_disagg),
         ("serving_speculative", serving_bench.serving_speculative),
+        ("serving_obs_overhead", serving_bench.serving_obs_overhead),
         ("roofline", roofline.roofline_rows),
     ]
     slow = {"table3_ppl", "table4_accuracy", "table6", "appC1_kv"}

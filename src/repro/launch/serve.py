@@ -71,6 +71,25 @@ from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
 
 
+def _export_obs(args, tracer, registry) -> None:
+    """Flush --trace-out / --metrics-out artifacts after a serve run."""
+    if tracer is not None:
+        tracer.export(args.trace_out)
+        print(f"  trace: {args.trace_out} ({len(tracer.events)} events; "
+              f"validate: python tools/check_trace.py {args.trace_out})")
+    if registry is not None:
+        import json
+
+        if args.metrics_out.endswith(".json"):
+            with open(args.metrics_out, "w") as f:
+                json.dump(registry.snapshot(), f, indent=1, sort_keys=True)
+                f.write("\n")
+        else:
+            with open(args.metrics_out, "w") as f:
+                f.write(registry.expose())
+        print(f"  metrics: {args.metrics_out}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -118,7 +137,31 @@ def main(argv=None):
     ap.add_argument("--transfer-gbps", type=float, default=0.0,
                     help="modelled prefill->decode wire bandwidth (0 = instantaneous)")
     ap.add_argument("--ckpt", default=None, help="restore params from a training checkpoint dir")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON of the serve run "
+                         "(open in https://ui.perfetto.dev; validate with "
+                         "tools/check_trace.py -- docs/observability.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry at exit: Prometheus text "
+                         "exposition, or a JSON snapshot when the path ends "
+                         "in .json")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="bracket the serve loop with jax.profiler traces "
+                         "into DIR (continuous mode)")
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke mode: reduced config, tiny request count "
+                         "and generation budget")
     args = ap.parse_args(argv)
+
+    if args.dry:
+        args.reduced = True
+        args.requests = min(args.requests, 4)
+        args.max_new = min(args.max_new, 4)
+        args.max_len = min(args.max_len, 64)
+    if (args.trace_out or args.metrics_out or args.jax_profile) and not (
+            args.continuous or args.disagg):
+        ap.error("--trace-out/--metrics-out/--jax-profile instrument the "
+                 "serving loops; add --continuous or --disagg")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -178,6 +221,19 @@ def main(argv=None):
     if args.continuous or args.disagg:
         from repro.serving.scheduler import Request, SchedulerConfig
 
+        # observability sinks (docs/observability.md): a Tracer when the run
+        # should leave a Chrome trace, a MetricsRegistry when it should leave
+        # a Prometheus/JSON dump.  None = the zero-overhead disabled path.
+        tracer = registry = None
+        if args.trace_out:
+            from repro.obs import Tracer
+
+            tracer = Tracer()
+        if args.metrics_out:
+            from repro.obs import MetricsRegistry
+
+            registry = MetricsRegistry()
+
         # Poisson arrival trace: exponential inter-arrival gaps at --rate req/s
         gaps = rng.exponential(1.0 / args.rate, size=len(reqs)) if args.rate > 0 else \
             np.zeros(len(reqs))
@@ -192,7 +248,8 @@ def main(argv=None):
             from repro.serving.disagg import serve_disagg
 
             rep = serve_disagg(
-                eng, stream, n_prefill=args.prefill_replicas,
+                eng, stream, trace=tracer, metrics=registry,
+                n_prefill=args.prefill_replicas,
                 n_decode=args.decode_replicas, chunk_tokens=args.chunk_tokens,
                 max_slots=args.slots, prefix_cache=args.prefix_cache,
                 transfer_gbps=args.transfer_gbps)
@@ -210,11 +267,13 @@ def main(argv=None):
                   f"{rep.prefill_tokens} computed prompt tokens)")
             for r in rep.requests[:3]:
                 print(f"  prompt[{len(r.prompt)}] @t={r.arrival:.2f}s -> {r.out_tokens}")
+            _export_obs(args, tracer, registry)
             return
         rep = eng.serve(stream, sched_cfg=SchedulerConfig(
             max_slots=args.slots, prefill_token_budget=args.prefill_budget),
             prefix_cache=args.prefix_cache,
-            speculate_k=args.speculate_k, draft_policy=args.draft_policy)
+            speculate_k=args.speculate_k, draft_policy=args.draft_policy,
+            trace=tracer, metrics=registry, profile_dir=args.jax_profile)
         print(f"{rep.new_tokens} tokens / {rep.wall_time:.2f}s = "
               f"{rep.tokens_per_s:.1f} tok/s over {rep.decode_steps} decode steps "
               f"(slots={args.slots}, packed={args.packed})")
@@ -233,6 +292,7 @@ def main(argv=None):
                   f"{rep.cache_evictions} evictions")
         for r in rep.requests[:3]:
             print(f"  prompt[{len(r.prompt)}] @t={r.arrival:.2f}s -> {r.out_tokens}")
+        _export_obs(args, tracer, registry)
         return
 
     t0 = time.perf_counter()

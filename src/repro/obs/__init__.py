@@ -1,0 +1,22 @@
+"""Observability: structured spans, metrics, injectable clocks.
+
+Zero-overhead when disabled (the default): serving code records against
+``NULL_TRACER`` / null metrics, which allocate nothing per step.  Enabled,
+``Tracer`` exports Chrome trace-event JSON (Perfetto-openable, validated by
+``tools/check_trace.py``) and ``MetricsRegistry`` exposes Prometheus text +
+JSON snapshots.  See docs/observability.md for the span taxonomy and metric
+naming conventions, and ``Engine.serve(trace=, metrics=, clock=)`` /
+``serve_disagg`` for the wiring.
+"""
+from .clock import Clock, FakeClock
+from .metrics import (DEFAULT_BUCKETS, NULL_COUNTER, NULL_GAUGE,
+                      NULL_HISTOGRAM, Counter, Gauge, Histogram,
+                      MetricsRegistry, percentile)
+from .trace import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Clock", "FakeClock",
+    "Tracer", "NullTracer", "NULL_TRACER",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram", "percentile",
+    "DEFAULT_BUCKETS", "NULL_COUNTER", "NULL_GAUGE", "NULL_HISTOGRAM",
+]

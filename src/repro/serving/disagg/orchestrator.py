@@ -28,12 +28,14 @@ default).  Shipping RaZeR wire pages costs 4.5/16 of bf16 KV -- the
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
+from repro.obs import NULL_TRACER, Clock
+
 from ..engine import ServeReport
-from ..pagepool import PagePoolConfig
-from .router import Placement, Router
+from ..pagepool import PagePoolConfig, install_pool_metrics
+from ..prefixcache import install_cache_metrics
+from .router import Placement, Router, install_router_metrics
 from .workers import DecodeWorker, PrefillWorker
 
 
@@ -105,9 +107,24 @@ class DisaggReport(ServeReport):
         intrinsic rate, independent of prefill load by construction."""
         return self.new_tokens / max(self.decode_busy, 1e-9)
 
+    # -- per-stage latency split (virtual timelines) --------------------------
+    # TTFT (inherited) covers routing + prefill queueing + chunked prefill;
+    # the decode-stage residency below covers shipment arrival -> retirement.
+    # Both inherit the exact nearest-rank percentile machinery of ServeReport.
+    def decode_stage_values(self) -> List[float]:
+        """Per-request decode-stage residency (s): first token to finish."""
+        return [r.finish_time - r.first_token_time for r in self.requests
+                if r.finish_time is not None and r.first_token_time is not None]
+
+    def decode_stage_percentile(self, q: float) -> float:
+        from repro.obs import percentile
+
+        return percentile(self.decode_stage_values(), q)
+
 
 def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
                  max_new_tokens: Optional[int] = None,
+                 clock=None, trace=None, metrics=None,
                  **knobs) -> DisaggReport:
     """Serve a request trace on a disaggregated prefill/decode fleet.
 
@@ -124,7 +141,20 @@ def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
     reusing its radix cache) and samples the first token -> pages ship in
     wire format (4.5 bits/elem) -> decode replica's insert stage scatters
     them into free pages and seats a slot -> dynamic-batch decode steps to
-    eos / ``max_new_tokens``."""
+    eos / ``max_new_tokens``.
+
+    Observability (docs/observability.md): ``clock`` is the injectable
+    ``obs.Clock`` every duration measurement goes through -- under an
+    ``obs.FakeClock(tick=...)`` every measured duration is an exact constant,
+    so the virtual timelines (and the exported trace) are byte-for-byte
+    reproducible.  ``trace`` (an ``obs.Tracer``) records the fleet on one
+    track per process: pid 0 the router (``route`` instants), pid 1 the
+    prefill replicas (``prefill_chunk`` / ``ship``, one tid per wid), pid 2
+    the decode replicas (``insert`` / ``decode_step`` / ``retire``) -- all
+    stamped with VIRTUAL times via ``Tracer.complete``, never the tracer's
+    own clock.  ``metrics`` (an ``obs.MetricsRegistry``) exports per-replica
+    pool/cache occupancy, router load, and the per-stage latency
+    histograms."""
     cfg = dataclasses.replace(cfg or DisaggConfig(), **knobs)
     n_new = max_new_tokens or engine.scfg.max_new_tokens
     reqs = engine._as_requests(requests, n_new)
@@ -142,6 +172,28 @@ def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
            for i in range(cfg.n_prefill)]
     dws = [DecodeWorker(i, engine, d_pool, max_slots=cfg.max_slots)
            for i in range(cfg.n_decode)]
+
+    clock = clock if clock is not None else Clock()
+    tracer = trace if trace is not None else NULL_TRACER
+    if tracer.enabled:
+        tracer.set_track(0, 0, process="router", thread="route")
+        for w in pws:
+            tracer.set_track(1, w.wid, process="prefill",
+                             thread=f"prefill/{w.wid}")
+        for d in dws:
+            tracer.set_track(2, d.wid, process="decode",
+                             thread=f"decode/{d.wid}")
+    if metrics is not None:
+        for w in pws:
+            install_pool_metrics(metrics, w.pool,
+                                 stage="prefill", replica=str(w.wid))
+            if w.cache is not None:
+                install_cache_metrics(metrics, w.cache,
+                                      stage="prefill", replica=str(w.wid))
+        for d in dws:
+            install_pool_metrics(metrics, d.pool,
+                                 stage="decode", replica=str(d.wid))
+        install_router_metrics(metrics, router)
 
     # arrival order (FIFO on ties, like the single-engine scheduler)
     waiting = sorted(reqs, key=lambda r: (r.arrival, r.rid))
@@ -172,13 +224,21 @@ def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
             router.assign(placement, len(req.prompt))
             dest[req.rid] = placement
             pws[placement.prefill].submit(req, ready_at=req.arrival)
+            tracer.instant("route", ts=t, pid=0, tid=0, rid=req.rid,
+                           prefill=placement.prefill, decode=placement.decode,
+                           predicted_hit=placement.predicted_hit)
             continue
 
         worker.t = t
-        t0 = time.perf_counter()
+        t0 = clock.now()
         if kind == "prefill":
+            job = worker.queue[0]
+            chunk_start = job.done
             done = worker.step(worker.t)
-            dur = time.perf_counter() - t0
+            dur = clock.now() - t0
+            tracer.complete("prefill_chunk", worker.t, dur, pid=1,
+                            tid=worker.wid, rid=job.req.rid,
+                            start_tok=chunk_start, end_tok=job.done)
             worker.t += dur
             worker.busy += dur
             if done is not None:
@@ -188,18 +248,37 @@ def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
                 router.prefill_done(placement, len(req.prompt))
                 dws[placement.decode].enqueue(
                     req, shipment, first, ready_at=worker.t + transfer_s(shipment))
+                tracer.instant("ship", ts=worker.t, pid=1, tid=worker.wid,
+                               rid=req.rid, nbytes=shipment.nbytes,
+                               decode=placement.decode)
         else:
+            ships0, steps0 = worker.shipments, worker.decode_steps
             retired = worker.insert(worker.t)
+            t_ins = clock.now() - t0
+            batch = len(worker.running)
             retired += worker.step(worker.t)
-            dur = time.perf_counter() - t0
+            dur = clock.now() - t0
+            if tracer.enabled:
+                # virtual-time spans: insert stage then the decode step, laid
+                # end to end on this replica's track
+                if worker.shipments > ships0:
+                    tracer.complete("insert", worker.t, t_ins, pid=2,
+                                    tid=worker.wid,
+                                    shipments=worker.shipments - ships0)
+                if worker.decode_steps > steps0:
+                    tracer.complete("decode_step", worker.t + t_ins,
+                                    dur - t_ins, pid=2, tid=worker.wid,
+                                    batch=batch)
             worker.t += dur
             worker.busy += dur
             for req in retired:
                 req.finish_time = worker.t  # tokens land as the step completes
                 router.retire(dest[req.rid])
+                tracer.instant("retire", ts=worker.t, pid=2, tid=worker.wid,
+                               rid=req.rid, new_tokens=len(req.out_tokens))
 
     wall = max([w.t for w in pws] + [d.t for d in dws], default=0.0)
-    return DisaggReport(
+    report = DisaggReport(
         requests=reqs, wall_time=wall,
         new_tokens=sum(len(r.out_tokens) for r in reqs),
         decode_steps=sum(d.decode_steps for d in dws),
@@ -223,3 +302,17 @@ def serve_disagg(engine, requests, *, cfg: Optional[DisaggConfig] = None,
         prefill_busy=sum(w.busy for w in pws),
         decode_busy=sum(d.busy for d in dws),
     )
+    if metrics is not None:
+        report.observe_into(metrics, stage="disagg")
+        metrics.counter(
+            "disagg_shipments_total",
+            "KV page shipments prefill -> decode").inc(report.shipments)
+        metrics.counter(
+            "disagg_transfer_bytes_total",
+            "Wire-format bytes shipped").inc(report.transfer_bytes)
+        busy = metrics.gauge(
+            "stage_busy_seconds", "Measured compute seconds per stage",
+            labels=("stage",))
+        busy.set(report.prefill_busy, stage="prefill")
+        busy.set(report.decode_busy, stage="decode")
+    return report

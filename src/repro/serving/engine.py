@@ -19,7 +19,6 @@ format (offline, once), and serves token prompts.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
@@ -416,7 +415,9 @@ class Engine:
 
     def serve(self, requests, *, sched_cfg=None, pool_cfg=None,
               max_new_tokens: Optional[int] = None, prefix_cache: bool = True,
-              speculate_k: int = 0, draft_policy=None):
+              speculate_k: int = 0, draft_policy=None,
+              clock=None, trace=None, metrics=None,
+              profile_dir: Optional[str] = None):
         """Continuous batching: serve a stream of requests over the paged
         RaZeR-quantized KV pool, decoding a dynamic batch each iteration.
 
@@ -444,10 +445,29 @@ class Engine:
         outputs stay bit-identical to ``speculate_k=0`` for ANY draft policy;
         only throughput changes (with the accept rate).
 
+        Observability (docs/observability.md), all off by default and
+        zero-overhead when off:
+
+          * ``clock``   -- an ``obs.Clock``; every timestamp and sleep in the
+            loop goes through it (``obs.FakeClock`` makes latency stats exact
+            and deterministic in tests).  Greedy OUTPUTS never depend on it.
+          * ``trace``   -- an ``obs.Tracer``; the loop records the request
+            lifecycle (admit / prefill / decode_step / draft / verify /
+            retire) on the serve-relative timeline (the tracer's clock is
+            rebound to it, so trace timestamps line up with arrivals).
+          * ``metrics`` -- an ``obs.MetricsRegistry``; pool/cache occupancy
+            export as function-backed gauges, and TTFT / latency / per-token
+            latency / step-duration histograms populate as requests finish.
+          * ``profile_dir`` -- bracket the serve loop with
+            ``jax.profiler.start_trace/stop_trace`` for kernel deep dives.
+
         Returns a ``ServeReport`` (outputs in submission order + latency /
-        throughput / pool / prefix-cache / speculation stats)."""
-        from repro.serving.pagepool import KVPagePool, PagePoolConfig
-        from repro.serving.prefixcache import PrefixCache
+        throughput / pool / prefix-cache / speculation stats, with exact
+        p50/p95/p99 TTFT / latency / per-token-latency properties)."""
+        from repro.obs import NULL_TRACER, Clock
+        from repro.serving.pagepool import (KVPagePool, PagePoolConfig,
+                                            install_pool_metrics)
+        from repro.serving.prefixcache import PrefixCache, install_cache_metrics
         from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 
         sched_cfg = sched_cfg or SchedulerConfig()
@@ -467,15 +487,78 @@ class Engine:
                 page_size=ps, max_len=self.scfg.max_len)
         pool = KVPagePool(self.cfg, pool_cfg)
         cache = PrefixCache(pool) if prefix_cache else None
-        sched = Scheduler(sched_cfg, pool, cache=cache)
+        clock = clock if clock is not None else Clock()
+        tracer = trace if trace is not None else NULL_TRACER
+        sched = Scheduler(sched_cfg, pool, cache=cache, tracer=tracer)
         for r in reqs:
             sched.submit(r)
 
-        t0 = time.perf_counter()
-        now = lambda: time.perf_counter() - t0
+        t0 = clock.now()
+
+        def now() -> float:
+            return clock.now() - t0
+
+        mx = metrics is not None
+        if tracer.enabled:
+            # trace timestamps on the serve-relative timeline: admits line up
+            # with request arrival offsets, and a FakeClock run is diffable
+            tracer.clock = now
+            tracer.set_track(tracer.pid, tracer.tid,
+                             process="engine", thread="serve")
+        if spec is not None:
+            spec.clock, spec.tracer = clock, tracer
+        if mx:
+            install_pool_metrics(metrics, pool)
+            if cache is not None:
+                install_cache_metrics(metrics, cache)
+            metrics.histogram("serve_decode_step_seconds",
+                              "Wall seconds per decode step", labels=("stage",))
+            metrics.histogram("serve_prefill_seconds",
+                              "Wall seconds per prefill call", labels=("stage",))
         # the cached speculator accumulates stats across serve() calls;
         # report this run's delta against a snapshot
         spec_base = dataclasses.replace(spec.stats) if spec else None
+        if profile_dir:
+            jax.profiler.start_trace(profile_dir)
+        try:
+            self._serve_loop(sched, pool, spec, k, now, clock, tracer,
+                             metrics if mx else None)
+        finally:
+            if profile_dir:
+                jax.profiler.stop_trace()
+        decode_steps, prefill_tokens, cached_tokens, peak_pages, peak_slots = (
+            self._loop_stats)
+
+        wall = now()
+        new_tokens = sum(len(r.out_tokens) for r in reqs)
+        report = ServeReport(
+            requests=reqs, wall_time=wall, new_tokens=new_tokens,
+            decode_steps=decode_steps, prefill_tokens=prefill_tokens,
+            peak_pages=peak_pages, peak_slots=peak_slots,
+            page_bytes=pool.bytes_per_page(), pool_bytes=pool.total_bytes(),
+            cached_tokens=cached_tokens,
+            cache_lookups=cache.lookups if cache else 0,
+            cache_hits=cache.hits if cache else 0,
+            cache_evictions=cache.evictions if cache else 0,
+            speculate_k=k,
+            drafted_tokens=spec.stats.drafted - spec_base.drafted if spec else 0,
+            accepted_drafts=spec.stats.accepted - spec_base.accepted if spec else 0,
+            draft_steps=spec.stats.draft_steps - spec_base.draft_steps if spec else 0,
+            draft_time=spec.stats.draft_time - spec_base.draft_time if spec else 0.0,
+            verify_time=spec.stats.verify_time - spec_base.verify_time if spec else 0.0,
+        )
+        if mx:
+            report.observe_into(metrics)
+        return report
+
+    def _serve_loop(self, sched, pool, spec, k: int, now, clock, tracer,
+                    metrics) -> None:
+        """The continuous-batching event loop (see ``serve``, which owns
+        setup and the report).  Loop totals land in ``self._loop_stats``."""
+        mx = metrics is not None
+        if mx:
+            step_h = metrics.get("serve_decode_step_seconds")
+            prefill_h = metrics.get("serve_prefill_seconds")
         decode_steps = prefill_tokens = cached_tokens = 0
         peak_pages = peak_slots = 0
         # slot->pages assignments only change on admission/retirement, so the
@@ -499,7 +582,7 @@ class Engine:
                         "scheduler stalled: an arrived request cannot be admitted "
                         "into an idle engine"
                     )
-                time.sleep(max(nxt - now(), 0.0))
+                clock.sleep(max(nxt - now(), 0.0))
                 continue
             idle_retries = 0
             # prefill phase (token-budgeted by the scheduler; a prefix-cache
@@ -517,15 +600,22 @@ class Engine:
                     cached_tokens += req.cached_tokens
                     sched.start(req, by_rid[req.dedup_of].out_tokens[0], now())
                     continue
-                if req.cached_tokens:
-                    pool.flush_forks(req.rid)  # COW copy, after donors' writes
-                    last, caches = self._prefill_range(
-                        req.prompt, req.cached_tokens, len(req.prompt), pool, req.rid)
-                    pool.write_prefill(req.rid, caches, len(req.prompt),
-                                       start=req.cached_tokens)
-                else:
-                    last, caches = self._serve_prefill(req.prompt)
-                    pool.write_prefill(req.rid, caches, len(req.prompt))
+                if mx:
+                    pt = now()
+                with tracer.span("prefill", rid=req.rid,
+                                 tokens=len(req.prompt) - req.cached_tokens,
+                                 cached=req.cached_tokens):
+                    if req.cached_tokens:
+                        pool.flush_forks(req.rid)  # COW copy, after donors' writes
+                        last, caches = self._prefill_range(
+                            req.prompt, req.cached_tokens, len(req.prompt), pool, req.rid)
+                        pool.write_prefill(req.rid, caches, len(req.prompt),
+                                           start=req.cached_tokens)
+                    else:
+                        last, caches = self._serve_prefill(req.prompt)
+                        pool.write_prefill(req.rid, caches, len(req.prompt))
+                if mx:
+                    prefill_h.observe(now() - pt, stage="engine")
                 prefill_tokens += len(req.prompt) - req.cached_tokens
                 cached_tokens += req.cached_tokens
                 sched.start(req, int(jnp.argmax(last[0])), now())
@@ -537,43 +627,35 @@ class Engine:
             batch = sched.decode_batch()
             if batch is None:
                 continue
+            if mx:
+                st = now()
             if spec is not None:
                 # draft-k-verify-1: the speculator appends/truncates pages
-                # every iteration, so the cached table is useless here
-                spec.decode_iteration(pool, sched, batch, k, now())
+                # every iteration, so the cached table is useless here (the
+                # draft/verify spans record inside decode_iteration)
+                spec.decode_iteration(pool, sched, batch, k, now)
                 decode_steps += 1
                 page_table = None
                 peak_pages = max(peak_pages, pool.pages_in_use)
+                if mx:
+                    step_h.observe(now() - st, stage="engine")
                 continue
             seq_ids, tokens, cur_lens = batch
-            if page_table is None:
-                page_table = pool.page_table(seq_ids)
-            logits, pool.caches = self._paged_decode_jit(
-                self.params, jnp.asarray(tokens, jnp.int32), pool.caches,
-                page_table, jnp.asarray(cur_lens, jnp.int32))
+            with tracer.span("decode_step", batch=len(sched.running)):
+                if page_table is None:
+                    page_table = pool.page_table(seq_ids)
+                logits, pool.caches = self._paged_decode_jit(
+                    self.params, jnp.asarray(tokens, jnp.int32), pool.caches,
+                    page_table, jnp.asarray(cur_lens, jnp.int32))
+                toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             decode_steps += 1
-            toks = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            if mx:
+                step_h.observe(now() - st, stage="engine")
             if sched.post_decode(toks.tolist(), now()):
                 page_table = None  # a retirement freed a slot
 
-        wall = now()
-        new_tokens = sum(len(r.out_tokens) for r in reqs)
-        return ServeReport(
-            requests=reqs, wall_time=wall, new_tokens=new_tokens,
-            decode_steps=decode_steps, prefill_tokens=prefill_tokens,
-            peak_pages=peak_pages, peak_slots=peak_slots,
-            page_bytes=pool.bytes_per_page(), pool_bytes=pool.total_bytes(),
-            cached_tokens=cached_tokens,
-            cache_lookups=cache.lookups if cache else 0,
-            cache_hits=cache.hits if cache else 0,
-            cache_evictions=cache.evictions if cache else 0,
-            speculate_k=k,
-            drafted_tokens=spec.stats.drafted - spec_base.drafted if spec else 0,
-            accepted_drafts=spec.stats.accepted - spec_base.accepted if spec else 0,
-            draft_steps=spec.stats.draft_steps - spec_base.draft_steps if spec else 0,
-            draft_time=spec.stats.draft_time - spec_base.draft_time if spec else 0.0,
-            verify_time=spec.stats.verify_time - spec_base.verify_time if spec else 0.0,
-        )
+        self._loop_stats = (decode_steps, prefill_tokens, cached_tokens,
+                            peak_pages, peak_slots)
 
 
 @dataclasses.dataclass
@@ -644,15 +726,113 @@ class ServeReport:
     def tokens_per_s(self) -> float:
         return self.new_tokens / max(self.wall_time, 1e-9)
 
+    # -- latency distributions ------------------------------------------------
+    # raw per-request samples; percentiles are exact nearest-rank
+    # (obs.percentile), so tests can pin them to the digit under a FakeClock
+    def ttft_values(self) -> List[float]:
+        """Per-request time-to-first-token (s), finished requests only."""
+        return [r.first_token_time - r.arrival for r in self.requests
+                if r.first_token_time is not None]
+
+    def latency_values(self) -> List[float]:
+        """Per-request total latency (s), finished requests only."""
+        return [r.finish_time - r.arrival for r in self.requests
+                if r.finish_time is not None]
+
+    def tpot_values(self) -> List[float]:
+        """Per-request mean per-token latency after the first token (s);
+        requests generating a single token carry no decode interval."""
+        return [(r.finish_time - r.first_token_time) / (len(r.out_tokens) - 1)
+                for r in self.requests
+                if r.finish_time is not None and len(r.out_tokens) > 1]
+
     @property
     def mean_ttft(self) -> float:
         """Mean time-to-first-token (s) over finished requests."""
-        ts = [r.first_token_time - r.arrival for r in self.requests
-              if r.first_token_time is not None]
+        ts = self.ttft_values()
         return sum(ts) / len(ts) if ts else 0.0
 
     @property
     def mean_latency(self) -> float:
-        ts = [r.finish_time - r.arrival for r in self.requests
-              if r.finish_time is not None]
+        ts = self.latency_values()
         return sum(ts) / len(ts) if ts else 0.0
+
+    def ttft_percentile(self, q: float) -> float:
+        from repro.obs import percentile
+
+        return percentile(self.ttft_values(), q)
+
+    def latency_percentile(self, q: float) -> float:
+        from repro.obs import percentile
+
+        return percentile(self.latency_values(), q)
+
+    def tpot_percentile(self, q: float) -> float:
+        from repro.obs import percentile
+
+        return percentile(self.tpot_values(), q)
+
+    @property
+    def ttft_p50(self) -> float:
+        return self.ttft_percentile(50)
+
+    @property
+    def ttft_p95(self) -> float:
+        return self.ttft_percentile(95)
+
+    @property
+    def ttft_p99(self) -> float:
+        return self.ttft_percentile(99)
+
+    @property
+    def latency_p50(self) -> float:
+        return self.latency_percentile(50)
+
+    @property
+    def latency_p95(self) -> float:
+        return self.latency_percentile(95)
+
+    @property
+    def latency_p99(self) -> float:
+        return self.latency_percentile(99)
+
+    @property
+    def tpot_p50(self) -> float:
+        return self.tpot_percentile(50)
+
+    @property
+    def tpot_p95(self) -> float:
+        return self.tpot_percentile(95)
+
+    @property
+    def tpot_p99(self) -> float:
+        return self.tpot_percentile(99)
+
+    def observe_into(self, registry, stage: str = "engine") -> None:
+        """Feed the per-request latency samples into a MetricsRegistry's
+        ``serve_ttft_seconds`` / ``serve_latency_seconds`` /
+        ``serve_tpot_seconds`` histograms and bump the token counters --
+        the registry-side mirror of the report's exact percentiles.
+        ``DisaggReport`` reuses this per stage."""
+        ttft = registry.histogram(
+            "serve_ttft_seconds", "Time to first token", labels=("stage",))
+        lat = registry.histogram(
+            "serve_latency_seconds", "Request total latency", labels=("stage",))
+        tpot = registry.histogram(
+            "serve_tpot_seconds", "Per-token latency after the first",
+            labels=("stage",))
+        for v in self.ttft_values():
+            ttft.observe(v, stage=stage)
+        for v in self.latency_values():
+            lat.observe(v, stage=stage)
+        for v in self.tpot_values():
+            tpot.observe(v, stage=stage)
+        registry.counter(
+            "serve_tokens_total", "Committed new tokens",
+            labels=("stage",)).inc(self.new_tokens, stage=stage)
+        registry.counter(
+            "serve_prefill_tokens_total", "Prompt tokens computed by prefill",
+            labels=("stage",)).inc(self.prefill_tokens, stage=stage)
+        registry.counter(
+            "serve_requests_total", "Requests finished",
+            labels=("stage",)).inc(len(self.requests), stage=stage)

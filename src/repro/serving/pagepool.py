@@ -199,6 +199,20 @@ class KVPagePool:
         # immutable by construction (prefill/decode only ever write positions
         # past the shared prefix, which live in sequence-private pages).
         self._refs: Dict[int, int] = {}
+        # optional observability hooks, called as listener(event, n_pages)
+        # with event in {"alloc", "append", "release", "truncate",
+        # "cow_fork"} -- see install_pool_metrics / docs/observability.md.
+        # A list (not a single callable): the engine's metrics wiring and a
+        # test probe can both subscribe without displacing each other.
+        self._listeners: List = []
+
+    def add_listener(self, fn) -> None:
+        """Subscribe ``fn(event, n_pages)`` to allocator events."""
+        self._listeners.append(fn)
+
+    def _notify(self, event: str, n: int) -> None:
+        for fn in self._listeners:
+            fn(event, n)
 
     # -- accounting ----------------------------------------------------------
     @property
@@ -303,6 +317,8 @@ class KVPagePool:
             self._refs[pg] = 1
             pages.append(pg)
         self._seq_pages[seq_id] = pages
+        if self._listeners:
+            self._notify("alloc", need - len(shared))
         return pages
 
     def append(self, seq_id: int, new_len: int) -> List[int]:
@@ -329,6 +345,8 @@ class KVPagePool:
             pages.append(self._free.pop())
             self._refs[pages[-1]] = 1
             added.append(pages[-1])
+        if added and self._listeners:
+            self._notify("append", len(added))
         return added
 
     def truncate(self, seq_id: int, new_len: int) -> List[int]:
@@ -365,6 +383,8 @@ class KVPagePool:
                 self.decref(self._pending_forks.pop(seq_id)[1])
             self.decref(pg)
             popped.append(pg)
+        if popped and self._listeners:
+            self._notify("truncate", len(popped))
         return popped
 
     def flush_forks(self, seq_id: int) -> None:
@@ -377,6 +397,8 @@ class KVPagePool:
                 self.caches[gi] = _copy_page(
                     c, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32))
             self.decref(src)
+            if self._listeners:
+                self._notify("cow_fork", 1)
 
     def release(self, seq_id: int) -> None:
         """Drop a finished/evicted sequence's ownership of its pages.  Private
@@ -389,8 +411,13 @@ class KVPagePool:
                 f"release() for unknown sequence {seq_id}: it holds no pages "
                 f"(never allocated, or already released)"
             )
+        free_before = len(self._free)
         for pg in self._seq_pages.pop(seq_id):
             self.decref(pg)
+        if self._listeners:
+            # count pages actually returned to the free list, not decrefs --
+            # cache-shared pages survive their donor and are not "released"
+            self._notify("release", len(self._free) - free_before)
 
     def sequence_pages(self, seq_id: int) -> List[int]:
         return list(self._seq_pages[seq_id])
@@ -539,3 +566,37 @@ class KVPagePool:
         k = kv_dequantize(c["k_codes"][:, pids, sids], c["k_meta"][:, pids, sids], self.cfg.hd)
         v = kv_dequantize(c["v_codes"][:, pids, sids], c["v_meta"][:, pids, sids], self.cfg.hd)
         return k, v
+
+
+def install_pool_metrics(registry, pool: KVPagePool, *,
+                         stage: str = "engine", replica: str = "0") -> None:
+    """Export a pool's occupancy and allocator traffic into ``registry``.
+
+    Occupancy is function-backed gauges (``pool_pages{state=...}``,
+    ``pool_refcount_total``): the registry reads the pool at collection
+    time and the allocator hot path never touches a metric.  Allocator
+    traffic (``pool_page_events_total{event=...}``) rides the listener
+    hook.  ``stage``/``replica`` distinguish disagg fleet members sharing
+    one registry ("prefill"/"decode" x worker id); the single engine uses
+    the defaults.
+    """
+    pages = registry.gauge(
+        "pool_pages", "KV pool pages by state", labels=("stage", "replica", "state"))
+    pages.set_function(lambda: pool.num_free_pages,
+                       stage=stage, replica=replica, state="free")
+    pages.set_function(lambda: pool.pages_in_use,
+                       stage=stage, replica=replica, state="live")
+    pages.set_function(lambda: 1,  # the reserved null page
+                       stage=stage, replica=replica, state="null")
+    refs = registry.gauge(
+        "pool_refcount_total",
+        "Sum of page owner counts (> live pages means prefix sharing)",
+        labels=("stage", "replica"))
+    refs.set_function(lambda: sum(pool._refs.values()),
+                      stage=stage, replica=replica)
+    events = registry.counter(
+        "pool_page_events_total",
+        "Allocator events by type (pages moved per event)",
+        labels=("stage", "replica", "event"))
+    pool.add_listener(
+        lambda event, n: events.inc(n, stage=stage, replica=replica, event=event))

@@ -47,11 +47,14 @@ surface pinned (live readers, protected, or still-interior) are stashed and
 re-pushed after the pass; the heap is compacted when stale entries outnumber
 live nodes 4:1.
 
-An optional ``listener`` receives ``("insert", path)`` / ``("evict", path)``
+Optional listeners receive ``("insert", path)`` / ``("evict", path)``
 events (``path`` = the node's root-to-node tuple of token chunks).  The
 disagg router (serving/disagg/router.py) subscribes per-replica views to
 these events so request placement can rank replicas by radix hit length
-without peeking at -- or LRU-perturbing -- replica-local trees.
+without peeking at -- or LRU-perturbing -- replica-local trees; the
+observability layer (``install_cache_metrics``) subscribes a second
+listener on the same hook, which is why listeners are a fan-out list
+rather than one slot.
 """
 from __future__ import annotations
 
@@ -104,7 +107,12 @@ class PrefixCache:
         self.page_size = pool.pool_cfg.page_size
         self.root = RadixNode(chunk=(), page=-1, parent=None)
         self._clock = itertools.count(1)
-        self.listener = listener
+        # fan-out list: the disagg router's view feed and the metrics wiring
+        # can both subscribe (see add_listener); the ctor arg keeps the
+        # original single-listener call sites working unchanged
+        self._listeners: List[Callable[[str, Tuple[Tuple[int, ...], ...]], None]] = []
+        if listener is not None:
+            self._listeners.append(listener)
         # lazy-deletion LRU heap: (last_used, tiebreak, node); an entry is
         # live iff its timestamp still equals the node's last_used and the
         # node is still in the tree (parent set)
@@ -115,6 +123,15 @@ class PrefixCache:
         self.hits = 0
         self.hit_tokens = 0
         self.evictions = 0
+
+    def add_listener(
+            self, fn: Callable[[str, Tuple[Tuple[int, ...], ...]], None]) -> None:
+        """Subscribe ``fn(event, path)`` to insert/evict events."""
+        self._listeners.append(fn)
+
+    def _notify(self, event: str, path: Tuple[Tuple[int, ...], ...]) -> None:
+        for fn in self._listeners:
+            fn(event, path)
 
     # -- LRU heap ------------------------------------------------------------
     def _bump(self, node: RadixNode) -> None:
@@ -157,6 +174,11 @@ class PrefixCache:
     @property
     def cached_pages(self) -> int:
         return len(self._nodes())
+
+    @property
+    def nodes(self) -> int:
+        """Live radix node count (O(1): maintained by insert/evict)."""
+        return self._live_nodes
 
     def evictable_pages(self, protect: Sequence[int] = ()) -> int:
         """Pages reclaimable by cascading LRU eviction right now: cache-only
@@ -242,10 +264,10 @@ class PrefixCache:
                 new += 1
             self._bump(child)
             node = child
-        if self.listener is not None and len(prompt) >= ps:
+        if self._listeners and len(prompt) >= ps:
             # full published path, new chunks or not: the router view insert
             # is idempotent, and re-announcing keeps it self-healing
-            self.listener("insert", self._path(node))
+            self._notify("insert", self._path(node))
         return new
 
     # -- eviction ------------------------------------------------------------
@@ -274,8 +296,8 @@ class PrefixCache:
                 stash.append(entry)
                 continue
             parent = node.parent
-            if self.listener is not None:
-                self.listener("evict", self._path(node))
+            if self._listeners:
+                self._notify("evict", self._path(node))
             del parent.children[node.chunk]
             node.parent = None  # marks every remaining heap entry for it stale
             self.pool.decref(node.page)  # last owner -> page freed
@@ -289,3 +311,34 @@ class PrefixCache:
         for entry in stash:
             heapq.heappush(self._heap, entry)
         return freed
+
+
+def install_cache_metrics(registry, cache: PrefixCache, *,
+                          stage: str = "engine", replica: str = "0") -> None:
+    """Export a prefix cache's hit stats and tree size into ``registry``.
+
+    Hit/eviction totals are function-backed gauges reading the cache's own
+    counters at collection time (the match/evict paths never touch a
+    metric); publish/evict traffic additionally rides the listener hook as
+    ``cache_events_total{event=...}``.  ``stage``/``replica`` distinguish
+    disagg fleet members sharing one registry.
+    """
+    for name, help_, fn in (
+        ("cache_radix_nodes", "Live radix tree nodes (cached pages)",
+         lambda: cache.nodes),
+        ("cache_lookups", "Prefix-cache lookups recorded at admission",
+         lambda: cache.lookups),
+        ("cache_hits", "Admissions that reused a cached prefix",
+         lambda: cache.hits),
+        ("cache_hit_tokens", "Prompt tokens served from cached pages",
+         lambda: cache.hit_tokens),
+        ("cache_evictions", "Radix nodes evicted (pages reclaimed)",
+         lambda: cache.evictions),
+    ):
+        registry.gauge(name, help_, labels=("stage", "replica")).set_function(
+            fn, stage=stage, replica=replica)
+    events = registry.counter(
+        "cache_events_total", "Radix tree publish/evict events",
+        labels=("stage", "replica", "event"))
+    cache.add_listener(
+        lambda event, path: events.inc(1, stage=stage, replica=replica, event=event))

@@ -101,14 +101,23 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig, pool: KVPagePool, cache=None):
+    def __init__(self, cfg: SchedulerConfig, pool: KVPagePool, cache=None,
+                 tracer=None):
         """``cache`` is an optional ``serving.prefixcache.PrefixCache`` over
         the same pool: admission then charges only the uncached suffix against
         the prefill token budget, shared pages reserve no free pages, and pool
-        pressure triggers LRU eviction of unreferenced cached pages."""
+        pressure triggers LRU eviction of unreferenced cached pages.
+
+        ``tracer`` is an optional ``obs.Tracer``: admission and retirement
+        emit instant events on it, timestamped with the ``now`` the engine
+        already threads through every scheduler call (so a fake-clock serve
+        traces deterministically).  Default is the no-op recorder."""
+        from repro.obs import NULL_TRACER
+
         self.cfg = cfg
         self.pool = pool
         self.cache = cache
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.waiting: List[Request] = []  # kept sorted by arrival (FIFO on ties)
         self.running: Dict[int, Request] = {}  # slot -> request
         self.finished: List[Request] = []
@@ -256,6 +265,8 @@ class Scheduler:
             req.slot = self._free_slots.pop()
             req.prefill_start = now
             budget -= len(req.prompt) - cached
+            self.tracer.instant("admit", ts=now, rid=req.rid,
+                                prompt=len(req.prompt), cached=cached)
             admitted.append(req)
             batch_prompts[tuple(req.prompt)] = req
             if budget <= 0:
@@ -291,6 +302,9 @@ class Scheduler:
         req.dedup_of = donor.rid
         req.slot = self._free_slots.pop()
         req.prefill_start = now
+        self.tracer.instant("admit", ts=now, rid=req.rid,
+                            prompt=len(req.prompt), cached=len(req.prompt),
+                            dedup_of=donor.rid)
         return True
 
     def start(self, req: Request, first_token: int, now: float) -> None:
@@ -350,6 +364,8 @@ class Scheduler:
     def _retire(self, req: Request, now: float) -> None:
         req.state = FINISHED
         req.finish_time = now
+        self.tracer.instant("retire", ts=now, rid=req.rid,
+                            new_tokens=len(req.out_tokens))
         self.pool.release(req.rid)
         self._need_pages.pop(req.rid, None)
         self._free_slots.append(req.slot)

@@ -36,7 +36,6 @@ truncated-but-reserved pages out of admission's hands.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, List, Optional, Union
 
 import jax
@@ -45,6 +44,7 @@ import numpy as np
 
 from repro.core.policy import QuantPolicy, as_policy
 from repro.models import transformer as tf
+from repro.obs import NULL_TRACER, Clock
 from repro.parallel.sharding import sharding_ctx
 
 __all__ = ["SpeculativeDecoder", "SpecStats", "resolve_draft_policy"]
@@ -124,6 +124,12 @@ class SpeculativeDecoder:
                 draft = jax.device_put(draft, param_sharding_tree(draft, engine.mesh))
             self.draft_params = draft
         self.stats = SpecStats()
+        # observability seams, rebound by Engine.serve per call (the decoder
+        # itself is cached across serve() calls, keyed by draft policy):
+        # draft_time/verify_time measure through the clock, draft/verify
+        # spans record on the tracer.  Defaults: wall clock, no-op recorder
+        self.clock = Clock()
+        self.tracer = NULL_TRACER
 
         def _draft_step(params, token, caches, pages, cur_len):
             with sharding_ctx(engine.mesh):
@@ -138,12 +144,17 @@ class SpeculativeDecoder:
         self._draft_jit = jax.jit(_draft_step, donate_argnums=(2,))
         self._verify_jit = jax.jit(_verify_step, donate_argnums=(2,))
 
-    def decode_iteration(self, pool, sched, batch, k: int, now: float) -> List:
+    def decode_iteration(self, pool, sched, batch, k: int,
+                         now: Union[float, Callable[[], float]]) -> List:
         """One draft-k-verify-1 iteration over a ``decode_batch`` result.
         Commits accepted tokens through ``sched.post_verify``, rolls back
         rejected tail pages, updates ``self.stats``.  Returns the newly
         finished requests (the engine invalidates its cached page table --
-        appends/truncates change rows every iteration anyway)."""
+        appends/truncates change rows every iteration anyway).
+
+        ``now`` may be a zero-arg callable (the engine's serve-relative
+        clock): commit timestamps are then read AFTER verify completes, so
+        retire instants land after the verify span on the trace timeline."""
         seq_ids, tokens, cur_lens = batch
         b = len(seq_ids)
         # cover the k speculative writes: re-appends pages a previous rollback
@@ -159,32 +170,34 @@ class SpeculativeDecoder:
         tok = np.asarray(tokens, np.int32)
         drafts = np.zeros((k, b), np.int32)
 
-        t0 = time.perf_counter()
-        for t in range(k):
-            # idle slots stay pinned at position 0 (null page); their drafts
-            # are garbage and their slot commits nothing
-            cl_t = np.where(act, cur + t, 0).astype(np.int32)
-            if self.draft_fn is not None:
-                nxt = np.asarray(self.draft_fn(tok, cl_t, t), np.int32)
-            else:
-                logits, pool.caches = self._draft_jit(
-                    self.draft_params, jnp.asarray(tok), pool.caches,
-                    page_table, jnp.asarray(cl_t))
-                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            drafts[t] = nxt
-            tok = nxt
-        self.stats.draft_time += time.perf_counter() - t0
+        t0 = self.clock.now()
+        with self.tracer.span("draft", k=k, slots=int(act.sum())):
+            for t in range(k):
+                # idle slots stay pinned at position 0 (null page); their
+                # drafts are garbage and their slot commits nothing
+                cl_t = np.where(act, cur + t, 0).astype(np.int32)
+                if self.draft_fn is not None:
+                    nxt = np.asarray(self.draft_fn(tok, cl_t, t), np.int32)
+                else:
+                    logits, pool.caches = self._draft_jit(
+                        self.draft_params, jnp.asarray(tok), pool.caches,
+                        page_table, jnp.asarray(cl_t))
+                    nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+                drafts[t] = nxt
+                tok = nxt
+        self.stats.draft_time += self.clock.now() - t0
         self.stats.draft_steps += k
 
         # ONE verify pass scores all k+1 positions: feed [last, d1..dk]; the
         # logits at position t predict the token at cur_len + t + 1
-        t1 = time.perf_counter()
-        vtok = np.concatenate([np.asarray(tokens, np.int32)[None], drafts], axis=0).T
-        logits, pool.caches = self._verify_jit(
-            self.engine.params, jnp.asarray(vtok), pool.caches, page_table,
-            jnp.asarray(np.where(act, cur, 0).astype(np.int32)))
-        targets = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, k+1)
-        self.stats.verify_time += time.perf_counter() - t1
+        t1 = self.clock.now()
+        with self.tracer.span("verify", k=k, slots=int(act.sum())):
+            vtok = np.concatenate([np.asarray(tokens, np.int32)[None], drafts], axis=0).T
+            logits, pool.caches = self._verify_jit(
+                self.engine.params, jnp.asarray(vtok), pool.caches, page_table,
+                jnp.asarray(np.where(act, cur, 0).astype(np.int32)))
+            targets = np.asarray(jnp.argmax(logits, axis=-1), np.int32)  # (B, k+1)
+        self.stats.verify_time += self.clock.now() - t1
         self.stats.verify_steps += 1
 
         # greedy accept: commit targets[0..j] where j = longest prefix with
@@ -204,7 +217,7 @@ class SpeculativeDecoder:
             self.stats.accepted += m - 1
         self.stats.drafted += k * int(act.sum())
 
-        finished = sched.post_verify(commits, now)
+        finished = sched.post_verify(commits, now() if callable(now) else now)
         # rollback: drop pages covering only rejected positions (committed KV
         # spans [0, cur_len); the stale target/draft bytes past it never
         # attend).  Retired requests already released everything.

@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file (``--trace-out`` artifacts).
+
+    python tools/check_trace.py trace.json [more.json ...]
+
+Checks the structural invariants ``repro.obs.trace.Tracer`` promises and
+Perfetto/chrome://tracing assume:
+
+* top level is ``{"traceEvents": [...]}``; every event carries ``name``,
+  ``ph``, ``ts``, ``pid``, ``tid``;
+* per (pid, tid) track, non-metadata timestamps are monotonically
+  non-decreasing (each track is a single-threaded recorder);
+* B/E duration events nest: every E closes the innermost open B of the
+  same name on its track, and no B is left open at end of trace;
+* X (complete) events have a non-negative ``dur``;
+* i (instant) events carry a scope ``s``;
+* M (metadata) events are ``process_name``/``thread_name`` with an
+  ``args.name``.
+
+Exits non-zero listing every violation, plus a one-line per-file summary
+(event count, tracks, span names) on success -- CI runs this against the
+bench-smoke ``--dry`` serve's trace.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+KNOWN_PH = {"B", "E", "X", "i", "M"}
+REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
+
+
+def check_trace(path: Path) -> tuple[list[str], str]:
+    """Returns (violations, one-line summary)."""
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable trace JSON: {e}"], ""
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        return [f"{path}: top level must be an object with a 'traceEvents' list"], ""
+
+    bad: list[str] = []
+    last_ts: dict[tuple[int, int], float] = {}   # per-track monotonicity
+    open_spans: dict[tuple[int, int], list[str]] = {}  # per-track B stack
+    names: set[str] = set()
+
+    for i, ev in enumerate(doc["traceEvents"]):
+        where = f"{path}: event[{i}]"
+        if not isinstance(ev, dict):
+            bad.append(f"{where}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in ev]
+        if missing:
+            bad.append(f"{where}: missing keys {missing}")
+            continue
+        ph, name = ev["ph"], ev["name"]
+        track = (ev["pid"], ev["tid"])
+        ts = ev["ts"]
+        if not isinstance(ts, (int, float)):
+            bad.append(f"{where} {name!r}: non-numeric ts {ts!r}")
+            continue
+
+        if ph == "M":
+            if name not in ("process_name", "thread_name") or \
+                    "name" not in ev.get("args", {}):
+                bad.append(f"{where}: metadata event must be process_name/"
+                           f"thread_name with args.name, got {name!r}")
+            continue  # metadata is timeless: exempt from monotonicity
+        if ph not in KNOWN_PH:
+            bad.append(f"{where} {name!r}: unknown phase {ph!r}")
+            continue
+
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            bad.append(f"{where} {name!r}: ts {ts} < {prev} on track "
+                       f"pid={track[0]} tid={track[1]} (non-monotonic)")
+        last_ts[track] = ts
+        names.add(name)
+
+        if ph == "B":
+            open_spans.setdefault(track, []).append(name)
+        elif ph == "E":
+            stack = open_spans.get(track, [])
+            if not stack:
+                bad.append(f"{where} {name!r}: E with no open B on track "
+                           f"pid={track[0]} tid={track[1]}")
+            elif stack[-1] != name:
+                bad.append(f"{where}: E {name!r} closes B {stack[-1]!r} "
+                           f"(unbalanced nesting on pid={track[0]} "
+                           f"tid={track[1]})")
+                stack.pop()
+            else:
+                stack.pop()
+        elif ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                bad.append(f"{where} {name!r}: X event needs dur >= 0, "
+                           f"got {dur!r}")
+        elif ph == "i":
+            if ev.get("s") not in ("t", "p", "g"):
+                bad.append(f"{where} {name!r}: instant needs scope s in "
+                           f"t/p/g, got {ev.get('s')!r}")
+
+    for (pid, tid), stack in open_spans.items():
+        if stack:
+            bad.append(f"{path}: unclosed span(s) {stack} on track "
+                       f"pid={pid} tid={tid}")
+
+    summary = (f"{path}: {len(doc['traceEvents'])} events on "
+               f"{len(last_ts)} track(s); names: "
+               f"{', '.join(sorted(names)) or '(none)'}")
+    return bad, summary
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print(__doc__.strip().splitlines()[0])
+        print("usage: python tools/check_trace.py trace.json [more.json ...]")
+        return 2
+    bad, summaries = [], []
+    for arg in argv:
+        violations, summary = check_trace(Path(arg))
+        bad.extend(violations)
+        if summary:
+            summaries.append(summary)
+    if bad:
+        print("\n".join(bad))
+        print(f"\n{len(bad)} trace violation(s)")
+        return 1
+    print("\n".join(f"OK: {s}" for s in summaries))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
