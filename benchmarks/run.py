@@ -17,7 +17,23 @@ def main(argv=None) -> None:
     ap.add_argument("--dry", action="store_true",
                     help="CI smoke: skip slow benches, 1 timing iter, shrunken "
                          "workloads -- exercises every bench so the code can't rot")
+    ap.add_argument("--quant-report", default=None, metavar="OUT.json",
+                    help="also emit the per-layer quantization audit for the "
+                         "reduced paper config (tools/quant_report.py; gate "
+                         "with tools/check_bench.py --report OUT.json)")
     args = ap.parse_args(argv)
+
+    if args.quant_report:
+        # the accuracy half of the trajectory, next to the perf numbers
+        from pathlib import Path
+
+        sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+        import quant_report
+
+        rc = quant_report.main(["--arch", "llama3_2_3b", "--reduced",
+                                "--out", args.quant_report])
+        if rc:
+            sys.exit(rc)
 
     from . import common, kernel_bench, kv_quant, roofline, serving_bench, tables
     from .common import emit

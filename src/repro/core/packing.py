@@ -35,6 +35,7 @@ __all__ = [
     "decode_offset_register",
     "pack_scale_meta",
     "unpack_scale_meta",
+    "unpack_scale_meta_fields",
     "PackedRazerWeight",
     "PackedStackedTensor",
     "pack_weight",
@@ -131,6 +132,22 @@ def unpack_scale_meta(byte, *, weight: bool = True, sv_magnitudes: Tuple[float, 
         scale = grid[code.astype(jnp.int32)]
         sv = sv_magnitudes[0] * jnp.where(meta == 1, -1.0, 1.0)
     return scale, sv
+
+
+def unpack_scale_meta_fields(byte, *, weight: bool = True):
+    """byte -> (scale_code, sv_select, sv_sign) raw bit fields.
+
+    The telemetry read path (obs/numerics): ``unpack_scale_meta`` collapses
+    the metadata into decoded values, but the audit needs the raw fields --
+    the scale CODE for clipping/underflow histograms (code 0 is the grid
+    minimum, the top code the grid maximum) and the SV select/sign bits for
+    the per-block remap-usage histogram.  Activation bytes have no select
+    bit (single pair): select is returned as 0.
+    """
+    if weight:
+        meta = byte >> 6
+        return byte & 0x3F, (meta >> 1) & 1, meta & 1
+    return byte & 0x7F, jnp.zeros_like(byte), byte >> 7
 
 
 # ---------------------------------------------------------------------------

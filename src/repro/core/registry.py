@@ -86,6 +86,14 @@ class FormatEntry:
     # receives.  qlinear fuses the partial-sum reduce-scatter into the matmul
     # epilogue inside that shard_map (docs/parallelism.md#k-sharding).
     shard_packed_fn: Optional[Callable] = None  # (pw, k_axis) -> (specs, localize)
+    # numerics-audit hook (obs/numerics, docs/observability.md#numerics-audit):
+    # called as fn(obj, ref, spec, axis=...) where ``obj`` is either the
+    # format's packed container (wire-byte audit) or a raw weight (fakequant
+    # audit) and ``ref`` the bf16/f32 reference (or None); returns a JSON-able
+    # dict of code-usage / error / drift stats.  Formats that skip this get
+    # the generic BlockQuantized-protocol audit
+    # (``obs.numerics.generic_audit``) instead of razer-only special-casing.
+    audit_fn: Optional[Callable] = None  # (obj, ref, spec, axis=) -> stats dict
     min_block_size: int = 1  # e.g. 32 for OCP MXFP4
     takes_scale_fmt: bool = False
     takes_special_values: bool = False
@@ -129,6 +137,7 @@ def register_format(
     packed_stacked_type: Optional[type] = None,
     shard_stacked_fn: Optional[Callable] = None,
     shard_packed_fn: Optional[Callable] = None,
+    audit_fn: Optional[Callable] = None,
     min_block_size: int = 1,
     overwrite: bool = False,
 ) -> FormatEntry:
@@ -150,6 +159,7 @@ def register_format(
         packed_stacked_type=packed_stacked_type,
         shard_stacked_fn=shard_stacked_fn,
         shard_packed_fn=shard_packed_fn,
+        audit_fn=audit_fn,
         min_block_size=min_block_size,
         takes_scale_fmt=takes_scale_fmt,
         takes_special_values=takes_special_values,
@@ -307,6 +317,15 @@ def _razer_shard_packed(pw, k_axis):
     return specs, localize
 
 
+def _razer_audit(obj, ref, spec, axis: int = 0):
+    # lazy: repro.obs imports repro.core, so core registers a thunk.  The
+    # razer audit reads wire bytes (PackedRazerWeight / PackedStackedTensor)
+    # or falls through to the generic BlockQuantized audit for fakequant.
+    from repro.obs.numerics import razer_audit
+
+    return razer_audit(obj, ref, spec, axis=axis)
+
+
 def _razer_act_qdq(x, spec):
     if spec.scale_fmt not in (None, "e4m3"):
         # the fused act kernel hardcodes the §4.1 activation E4M3 block scale;
@@ -342,6 +361,7 @@ def _register_builtins() -> None:
         packed_stacked_type=PackedStackedTensor,
         shard_stacked_fn=_razer_shard_stacked,
         shard_packed_fn=_razer_shard_packed,
+        audit_fn=_razer_audit,
         overwrite=True,
     )
     register_format("mxfp4", mxfp4_quantize, min_block_size=32, overwrite=True)

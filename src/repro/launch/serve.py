@@ -71,6 +71,20 @@ from repro.models import transformer as tf
 from repro.serving.engine import Engine, ServeConfig
 
 
+def _write_report(path: str, report) -> None:
+    """Byte-stable quant-report JSON (same conventions as trace export)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    roll = report["rollups"]
+    print(f"  quant report: {path} ({roll['layers_audited']} layers audited, "
+          f"min SQNR {roll['min_sqnr_db']} dB, SV block rate "
+          f"{roll['sv_block_rate']}, max drift {roll['max_drift']}; "
+          f"gate: python tools/check_bench.py --report {path})")
+
+
 def _export_obs(args, tracer, registry) -> None:
     """Flush --trace-out / --metrics-out artifacts after a serve run."""
     if tracer is not None:
@@ -145,6 +159,18 @@ def main(argv=None):
                     help="write the metrics registry at exit: Prometheus text "
                          "exposition, or a JSON snapshot when the path ends "
                          "in .json")
+    ap.add_argument("--quant-report", default=None, metavar="OUT.json",
+                    help="emit the per-layer quantization audit (SQNR, FP4 "
+                         "code histograms, SV-remap hit rates, packed-vs-"
+                         "fakequant drift) before serving -- requires "
+                         "--packed; validate/gate with tools/check_bench.py "
+                         "(docs/observability.md#numerics-audit)")
+    ap.add_argument("--kv-audit", type=int, default=0, metavar="N",
+                    help="sample KV quantization error every Nth prefill "
+                         "write into the quant report's 'kv' section (0 = "
+                         "off; read-only hook, greedy outputs bit-identical "
+                         "either way; requires --continuous and "
+                         "--quant-report)")
     ap.add_argument("--jax-profile", default=None, metavar="DIR",
                     help="bracket the serve loop with jax.profiler traces "
                          "into DIR (continuous mode)")
@@ -162,6 +188,19 @@ def main(argv=None):
             args.continuous or args.disagg):
         ap.error("--trace-out/--metrics-out/--jax-profile instrument the "
                  "serving loops; add --continuous or --disagg")
+    if args.quant_report and not args.packed:
+        # the audit reads wire bytes; a fakequant/bf16 run has none to read
+        ap.error("--quant-report audits the packed wire format, but this run "
+                 "serves bf16 weights (no wire bytes to audit); add --packed, "
+                 "or use tools/quant_report.py --mode fakequant for "
+                 "accuracy-experiment policies")
+    if args.kv_audit:
+        if not args.continuous:
+            ap.error("--kv-audit samples KVPagePool prefill writes; add "
+                     "--continuous")
+        if not args.quant_report:
+            ap.error("--kv-audit results land in the quant report's 'kv' "
+                     "section; add --quant-report OUT.json")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -204,6 +243,15 @@ def main(argv=None):
         quant=QuantPolicy.packed() if args.packed else QuantPolicy.bf16(),
     )
     eng = Engine(params, cfg, scfg, mesh=mesh)
+
+    report = kv_auditor = None
+    if args.quant_report:
+        report = eng.quant_audit(model=args.arch)
+        _write_report(args.quant_report, report)
+        if args.kv_audit:
+            from repro.obs import KVAuditor
+
+            kv_auditor = KVAuditor(sample_every=args.kv_audit)
 
     rng = np.random.default_rng(0)
     sys_prompt = rng.integers(1, cfg.vocab_size, size=args.shared_prefix).tolist()
@@ -273,7 +321,12 @@ def main(argv=None):
             max_slots=args.slots, prefill_token_budget=args.prefill_budget),
             prefix_cache=args.prefix_cache,
             speculate_k=args.speculate_k, draft_policy=args.draft_policy,
-            trace=tracer, metrics=registry, profile_dir=args.jax_profile)
+            trace=tracer, metrics=registry, kv_audit=kv_auditor,
+            profile_dir=args.jax_profile)
+        if kv_auditor is not None:
+            # re-emit with the live-serving KV error section filled in
+            report["kv"] = kv_auditor.snapshot()
+            _write_report(args.quant_report, report)
         print(f"{rep.new_tokens} tokens / {rep.wall_time:.2f}s = "
               f"{rep.tokens_per_s:.1f} tok/s over {rep.decode_steps} decode steps "
               f"(slots={args.slots}, packed={args.packed})")

@@ -12,6 +12,9 @@ from .clock import Clock, FakeClock
 from .metrics import (DEFAULT_BUCKETS, NULL_COUNTER, NULL_GAUGE,
                       NULL_HISTOGRAM, Counter, Gauge, Histogram,
                       MetricsRegistry, percentile)
+from .numerics import (REPORT_SCHEMA, REPORT_SCHEMA_VERSION, KVAuditor,
+                       audit_model, generic_audit, install_numerics_metrics,
+                       razer_audit, validate_report)
 from .trace import NULL_TRACER, NullTracer, Tracer
 
 __all__ = [
@@ -19,4 +22,7 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER",
     "MetricsRegistry", "Counter", "Gauge", "Histogram", "percentile",
     "DEFAULT_BUCKETS", "NULL_COUNTER", "NULL_GAUGE", "NULL_HISTOGRAM",
+    "audit_model", "razer_audit", "generic_audit", "KVAuditor",
+    "install_numerics_metrics", "validate_report",
+    "REPORT_SCHEMA", "REPORT_SCHEMA_VERSION",
 ]

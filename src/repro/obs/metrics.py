@@ -274,15 +274,19 @@ class MetricsRegistry:
         self._metrics[name] = m
         return m
 
-    def counter(self, name: str, help: str = "", labels: Sequence[str] = ()) -> Counter:
-        return self._register(Counter, name, help, labels)
+    def counter(self, name: str, help: str = "", labels: Sequence[str] = (),
+                max_series: int = 1000) -> Counter:
+        return self._register(Counter, name, help, labels, max_series=max_series)
 
-    def gauge(self, name: str, help: str = "", labels: Sequence[str] = ()) -> Gauge:
-        return self._register(Gauge, name, help, labels)
+    def gauge(self, name: str, help: str = "", labels: Sequence[str] = (),
+              max_series: int = 1000) -> Gauge:
+        return self._register(Gauge, name, help, labels, max_series=max_series)
 
     def histogram(self, name: str, help: str = "", labels: Sequence[str] = (),
-                  buckets: Sequence[float] = DEFAULT_BUCKETS) -> Histogram:
-        return self._register(Histogram, name, help, labels, buckets=buckets)
+                  buckets: Sequence[float] = DEFAULT_BUCKETS,
+                  max_series: int = 1000) -> Histogram:
+        return self._register(Histogram, name, help, labels, buckets=buckets,
+                              max_series=max_series)
 
     def get(self, name: str) -> Optional[Metric]:
         return self._metrics.get(name)

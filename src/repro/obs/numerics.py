@@ -1,0 +1,657 @@
+"""Numerics observability: the per-layer quantization audit.
+
+The serving stack is observable (clock/trace/metrics); this module makes the
+*quantization* stack observable — the part that reproduces the paper.  Given
+a model's raw params and its ``QuantPolicy`` (plus, for packed mode, the
+wire-format tree ``pack_model_weights`` produced), ``audit_model`` emits a
+per-layer report:
+
+* **error vs reference** — SQNR (dB), MSE and max-abs-err of the dequantized
+  wire bytes against the bf16 weights;
+* **FP4 code usage** — a 16-bin histogram of the raw wire nibbles via
+  ``unpack_fp4_codes``, and the SV-remap telemetry the paper's central claim
+  rests on: how often the redundant ``-0`` code (``FP4_NEG_ZERO_CODE``)
+  actually fires, per block and per element, split by which SV pair the
+  metadata selected (``unpack_scale_meta_fields``);
+* **scale-code distribution** — min/max E3M3 scale codes with clipping
+  (grid-max) and underflow (grid-min) block counts;
+* **packed-vs-fakequant drift** — ``PackedRazerWeight.dequantize()`` against
+  the registry fakequant path (``razer_qdq`` semantics through
+  ``TensorSpec.quantize``), asserting the PR-1 invariant that the wire bytes
+  and the accuracy experiments compute the same numbers (exactly 0 for
+  razer).
+
+Sibling formats self-report through the registry's ``audit_fn`` hook
+(``FormatEntry.audit_fn``); formats that do not register one get
+``generic_audit``, which audits any BlockQuantized-protocol format.
+
+Results feed the PR-9 observability layer: ``install_numerics_metrics``
+exports per-layer gauges under a cardinality guard plus model-level rollups,
+and ``audit_model(tracer=...)`` drops one ``quant_audit`` instant per
+audited layer into the same Perfetto timeline the serve spans live on.
+``KVAuditor`` extends the audit to live serving: a sampling hook on
+``KVPagePool.write_prefill`` records KV quantization error per page — off by
+default (``None`` hook slot, NULL-style no-op), and bit-identical serve
+outputs on or off because it only *reads* the prefill K/V.
+
+The report has a versioned JSON schema (``REPORT_SCHEMA`` /
+``validate_report``); ``tools/quant_report.py`` is the CLI and
+``tools/check_bench.py`` gates the rollups in CI.  See
+docs/observability.md#numerics-audit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import registry
+from repro.core.formats import FP4_NEG_ZERO_CODE, positive_format_values
+from repro.core.packing import (PackedRazerWeight, PackedStackedTensor,
+                                unpack_fp4_codes, unpack_scale_meta,
+                                unpack_scale_meta_fields)
+from repro.core.policy import QuantPolicy, TensorSpec, as_policy
+
+__all__ = [
+    "REPORT_SCHEMA",
+    "REPORT_SCHEMA_VERSION",
+    "audit_model",
+    "audit_layer",
+    "razer_audit",
+    "generic_audit",
+    "install_numerics_metrics",
+    "validate_report",
+    "KVAuditor",
+]
+
+REPORT_SCHEMA_VERSION = "razer-quant-report/v1"
+
+# engine.pack_model_weights packs weights >= this many elements; the audit
+# mirrors the eligibility rule so its layer set matches what actually packs
+_MIN_AUDIT = 16 * 16
+
+
+def _round(x) -> Optional[float]:
+    """9-significant-digit float for byte-stable golden reports (None for
+    NaN/inf — JSON has no spelling for them)."""
+    if x is None:
+        return None
+    f = float(x)
+    if math.isnan(f) or math.isinf(f):
+        return None
+    return float(f"{f:.9g}")
+
+
+def _sqnr_db(sum_sq_ref: float, sum_sq_err: float) -> Optional[float]:
+    """10*log10(signal/noise); None when the error is exactly zero (infinite
+    SQNR) or there is no signal."""
+    if sum_sq_err <= 0.0 or sum_sq_ref <= 0.0:
+        return None
+    return 10.0 * math.log10(sum_sq_ref / sum_sq_err)
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+# ---------------------------------------------------------------------------
+# razer wire-byte audit (PackedRazerWeight / PackedStackedTensor)
+# ---------------------------------------------------------------------------
+def _container_entries(obj):
+    """Flatten a packed container (incl. scan-stacked leaves) into per-entry
+    2-D wire tensors: (codes (M, K//2, N), scale_meta (M, K//16, N),
+    tensor_scale (M,), (K, N))."""
+    if isinstance(obj, PackedStackedTensor):
+        k, n = obj.shape[-2:]
+    else:
+        k, n = obj.shape
+    codes = _np(obj.codes).reshape(-1, k // 2, n)
+    meta = _np(obj.scale_meta).reshape(-1, k // 16, n)
+    ts = _np(obj.tensor_scale).reshape(-1).astype(np.float32)
+    return codes, meta, ts, (k, n)
+
+
+def razer_audit(obj, ref, spec: TensorSpec, axis: int = 0) -> Dict[str, Any]:
+    """The razer ``audit_fn``: wire-byte audit for packed containers, the
+    generic BlockQuantized audit for fakequant-mode raw weights.
+
+    ``ref`` is the original (bf16/f32) weight with the container's logical
+    shape, or None (packed params without the source checkpoint: code/scale
+    telemetry only, no error or drift stats).
+    """
+    if not isinstance(obj, (PackedRazerWeight, PackedStackedTensor)):
+        return generic_audit(obj, ref, spec, axis=axis)
+
+    codes, meta, ts, (k, n) = _container_entries(obj)
+    m = codes.shape[0]
+    sv_mags = obj.sv_magnitudes
+
+    # wire nibbles via the canonical read path: codes pack along K (axis -2),
+    # unpack_fp4_codes works on the last axis -> transpose first, like
+    # PackedRazerWeight.dequantize
+    nib = _np(unpack_fp4_codes(jnp.asarray(codes).swapaxes(-1, -2)))  # (M, N, K)
+    code_hist = np.bincount(nib.reshape(-1), minlength=16)
+    blocks = nib.reshape(m, n, k // 16, 16)
+    hit = blocks == FP4_NEG_ZERO_CODE  # fp4_encode never emits -0: a hit IS a remap
+    sv_block_mask = hit.any(axis=-1)
+    scale_code, sel, sign = (
+        _np(f) for f in unpack_scale_meta_fields(jnp.asarray(meta).swapaxes(-1, -2),
+                                                 weight=True))
+    sel_idx = (sel.astype(np.int64) << 1) | sign  # (+m0, -m0, +m1, -m1) order
+    select_hist = np.bincount(sel_idx[sv_block_mask].reshape(-1), minlength=4)
+
+    grid = positive_format_values("e3m3")
+    n_blocks = int(scale_code.size)
+    stats: Dict[str, Any] = {
+        "entries": m,
+        "n_blocks": n_blocks,
+        "wire_bytes": int(codes.nbytes + meta.nbytes + ts.nbytes),
+        "code_hist": [int(c) for c in code_hist],
+        "sv": {
+            "blocks": int(sv_block_mask.sum()),
+            "block_rate": _round(sv_block_mask.mean()),
+            "elements": int(hit.sum()),
+            "element_rate": _round(hit.mean()),
+            "select_hist": [int(c) for c in select_hist],
+            "magnitudes": [float(v) for v in sv_mags],
+        },
+        "scale": {
+            "min_code": int(scale_code.min()),
+            "max_code": int(scale_code.max()),
+            "clipped_blocks": int((scale_code == grid.size - 1).sum()),
+            "underflow_blocks": int((scale_code == 0).sum()),
+        },
+    }
+    if ref is None:
+        return stats
+
+    ref_np = _np(ref).astype(np.float64).reshape(m, k, n)
+    sum_sq_ref = sum_sq_err = 0.0
+    max_abs = drift = 0.0
+    for i in range(m):
+        pw = PackedRazerWeight(jnp.asarray(codes[i]), jnp.asarray(meta[i]),
+                               jnp.asarray(ts[i]), sv_mags, (k, n))
+        wq = pw.dequantize()  # the wire decode
+        # the PR-1 registry invariant: the fakequant path (razer_qdq through
+        # the registry dispatch) and the wire decode are the SAME numbers
+        fq = spec.quantize(jnp.asarray(ref_np[i], jnp.float32), axis=0).dequantize()
+        drift = max(drift, float(jnp.max(jnp.abs(wq - fq))))
+        err = _np(wq).astype(np.float64) - ref_np[i]
+        sum_sq_ref += float((ref_np[i] ** 2).sum())
+        sum_sq_err += float((err ** 2).sum())
+        max_abs = max(max_abs, float(np.abs(err).max()))
+    stats.update(
+        sqnr_db=_round(_sqnr_db(sum_sq_ref, sum_sq_err)),
+        mse=_round(sum_sq_err / ref_np.size),
+        max_abs_err=_round(max_abs),
+        drift_max_abs=_round(drift),
+    )
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# generic BlockQuantized-protocol audit (every other registered format)
+# ---------------------------------------------------------------------------
+def generic_audit(w, ref, spec: TensorSpec, axis: int = 0) -> Dict[str, Any]:
+    """Audit any format through its registry ``quantize`` fn alone.
+
+    Works for every BlockQuantized-protocol format (nvfp4/mxfp4/int4/nf4/
+    fouroversix/...) with no format-specific code: the value histogram comes
+    from the quantized grid values themselves, the drift check asserts the
+    registry invariant that two dispatches of the same input produce
+    identical numbers, and SV telemetry appears whenever the format's
+    container carries an ``sv_index`` (razer fakequant does; the baselines
+    return None and skip it).
+    """
+    x = jnp.asarray(w, jnp.float32)
+    bq = spec.quantize(x, axis=axis)
+    deq = bq.dequantize()
+    # registry determinism invariant: re-dispatching the same tensor through
+    # the same spec must reproduce the dequantized numbers exactly
+    deq2 = spec.quantize(x, axis=axis).dequantize()
+    drift = float(jnp.max(jnp.abs(deq - deq2)))
+
+    q = _np(bq.q).astype(np.float64)
+    values, counts = np.unique(q, return_counts=True)
+    n_blocks = int(q.size // q.shape[-1])
+    scale = _np(bq.block_scale).astype(np.float64)
+    stats: Dict[str, Any] = {
+        "entries": 1,
+        "n_blocks": n_blocks,
+        "value_hist": {_fmt_value(v): int(c) for v, c in zip(values, counts)},
+        "scale": {
+            "min": _round(scale.min()),
+            "max": _round(scale.max()),
+            "underflow_blocks": int((scale == 0.0).sum()),
+        },
+        "drift_max_abs": _round(drift),
+    }
+    sv_index = getattr(bq, "sv_index", None)
+    if sv_index is not None:
+        svi = _np(sv_index)
+        active = svi >= 0
+        sv = _np(bq.sv).astype(np.float64)
+        hits = (q == sv[..., None]) & active[..., None]
+        stats["sv"] = {
+            "blocks": int(active.sum()),
+            "block_rate": _round(active.mean()),
+            "elements": int(hits.sum()),
+            "element_rate": _round(hits.mean()),
+        }
+    if ref is not None:
+        ref_np = _np(ref).astype(np.float64)
+        err = _np(deq).astype(np.float64).reshape(ref_np.shape) - ref_np
+        sum_sq_ref = float((ref_np ** 2).sum())
+        sum_sq_err = float((err ** 2).sum())
+        stats.update(
+            sqnr_db=_round(_sqnr_db(sum_sq_ref, sum_sq_err)),
+            mse=_round(sum_sq_err / ref_np.size),
+            max_abs_err=_round(float(np.abs(err).max())),
+        )
+    return stats
+
+
+def _fmt_value(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f.is_integer() else repr(f)
+
+
+# ---------------------------------------------------------------------------
+# per-layer + whole-model audit
+# ---------------------------------------------------------------------------
+def audit_layer(path: str, raw_leaf, leaf, spec: TensorSpec) -> Optional[Dict[str, Any]]:
+    """One report entry for a resolved layer, or None when the layer is
+    structurally ineligible and stayed dense (mirrors the
+    ``pack_model_weights`` / ``fakequant_model_weights`` eligibility rule).
+
+    ``leaf`` is the (possibly packed) serving-tree leaf; ``raw_leaf`` the
+    reference weights.  Dispatches to the format's registered ``audit_fn``
+    (``generic_audit`` when it has none).
+    """
+    entry = spec.entry
+    audit_fn = entry.audit_fn or generic_audit
+    container = registry.packed_entry(leaf) or registry.grouped_entry(leaf)
+    if container is not None:
+        stats = audit_fn(leaf, raw_leaf, spec)
+        mode, container_name = "packed", type(leaf).__name__
+    else:
+        axis = raw_leaf.ndim - 2
+        if (raw_leaf.ndim < 2 or raw_leaf.size < _MIN_AUDIT
+                or raw_leaf.shape[axis] % spec.effective_block_size):
+            return None
+        if spec.mode == "packed":
+            # resolved packed but the serving tree kept it dense (e.g. a
+            # trailing dim that is not a block multiple on a stacked bank)
+            return None
+        stats = audit_fn(raw_leaf, raw_leaf, spec, axis=axis)
+        mode, container_name = "fakequant", None
+    out: Dict[str, Any] = {
+        "path": path,
+        "format": spec.format,
+        "mode": mode,
+        "container": container_name,
+        "shape": [int(s) for s in raw_leaf.shape],
+        "params": int(raw_leaf.size),
+    }
+    out.update(stats)
+    return out
+
+
+def audit_model(params, policy, *, packed=None, model: Optional[str] = None,
+                metrics=None, tracer=None, max_layer_series: int = 256,
+                kv_audit=None) -> Dict[str, Any]:
+    """Audit a whole param tree under ``policy`` -> the report dict.
+
+    ``packed`` is the wire-format tree ``pack_model_weights`` produced; when
+    omitted and the policy packs, the packing runs here (same walk, same
+    eligibility).  ``metrics``/``tracer`` are optional PR-9 sinks: per-layer
+    gauges + rollups land in the registry (``install_numerics_metrics``, with
+    ``max_layer_series`` as the cardinality guard) and one ``quant_audit``
+    instant per layer lands on the trace timeline.  ``kv_audit`` merges a
+    ``KVAuditor`` snapshot into the report's ``kv`` section.
+    """
+    policy = as_policy(policy)
+    if packed is None:
+        from repro.serving.engine import pack_model_weights
+
+        packed = pack_model_weights(params, None, policy)
+
+    layers: List[Dict[str, Any]] = []
+    counts = {"dense": 0, "params_total": 0, "params_quantized": 0}
+
+    def walk(raw, pk, path=""):
+        if isinstance(raw, dict):
+            for key in raw:
+                walk(raw[key], pk[key], f"{path}/{key}" if path else str(key))
+            return
+        counts["params_total"] += int(raw.size)
+        spec = policy.resolve(path)
+        entry = audit_layer(path, raw, pk, spec) if spec is not None else None
+        if entry is None:
+            counts["dense"] += 1
+            return
+        counts["params_quantized"] += int(raw.size)
+        layers.append(entry)
+
+    walk(params, packed)
+
+    sqnrs = [(l["sqnr_db"], l["path"]) for l in layers if l.get("sqnr_db") is not None]
+    drifts = [l["drift_max_abs"] for l in layers if l.get("drift_max_abs") is not None]
+    sv_blocks = sum(l["sv"]["blocks"] for l in layers if l.get("sv"))
+    blocks_total = sum(l["n_blocks"] for l in layers)
+    rollups: Dict[str, Any] = {
+        "layers_audited": len(layers),
+        "layers_dense": counts["dense"],
+        "params_total": counts["params_total"],
+        "params_quantized": counts["params_quantized"],
+        "wire_bytes": sum(l.get("wire_bytes", 0) for l in layers),
+        "blocks_total": blocks_total,
+        "sv_blocks": sv_blocks,
+        "sv_block_rate": _round(sv_blocks / blocks_total) if blocks_total else None,
+        "clipped_blocks": sum(l["scale"].get("clipped_blocks", 0)
+                              for l in layers if l.get("scale")),
+        "underflow_blocks": sum(l["scale"].get("underflow_blocks", 0)
+                                for l in layers if l.get("scale")),
+        "min_sqnr_db": _round(min(sqnrs)[0]) if sqnrs else None,
+        "mean_sqnr_db": _round(sum(s for s, _ in sqnrs) / len(sqnrs)) if sqnrs else None,
+        "worst_layer": min(sqnrs)[1] if sqnrs else None,
+        "max_drift": _round(max(drifts)) if drifts else None,
+    }
+    report: Dict[str, Any] = {
+        "schema": REPORT_SCHEMA_VERSION,
+        "model": model,
+        "policy": {
+            "weight_format": policy.weight.format,
+            "mode": policy.mode,
+            "block_size": policy.weight.block_size,
+            "scale_fmt": policy.weight.scale_fmt,
+        },
+        "layers": layers,
+        "rollups": rollups,
+        "kv": kv_audit.snapshot() if kv_audit is not None else None,
+    }
+    if tracer is not None and tracer.enabled:
+        for l in layers:
+            tracer.instant(
+                "quant_audit", layer=l["path"], format=l["format"],
+                sqnr_db=l.get("sqnr_db"),
+                sv_block_rate=(l.get("sv") or {}).get("block_rate"),
+                drift=l.get("drift_max_abs"))
+    if metrics is not None:
+        install_numerics_metrics(metrics, report, max_layers=max_layer_series)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# metrics export (PR-9 registry)
+# ---------------------------------------------------------------------------
+def install_numerics_metrics(registry_, report: Dict[str, Any], *,
+                             max_layers: int = 256) -> None:
+    """Export a report into a ``MetricsRegistry``: per-layer gauges capped at
+    ``max_layers`` series (the cardinality guard: a pathological policy
+    cannot flood the registry — overflow layers are counted, not exported)
+    plus model-level rollups."""
+    g_sqnr = registry_.gauge(
+        "quant_layer_sqnr_db", "Per-layer SQNR of quantized vs bf16 weights (dB)",
+        labels=("layer",), max_series=max_layers)
+    g_sv = registry_.gauge(
+        "quant_layer_sv_block_rate",
+        "Per-layer fraction of quant blocks whose SV remap fired",
+        labels=("layer",), max_series=max_layers)
+    g_drift = registry_.gauge(
+        "quant_layer_drift", "Per-layer packed-vs-fakequant max abs drift",
+        labels=("layer",), max_series=max_layers)
+    dropped = 0
+    for l in report["layers"]:
+        try:
+            if l.get("sqnr_db") is not None:
+                g_sqnr.set(l["sqnr_db"], layer=l["path"])
+            if l.get("sv"):
+                g_sv.set(l["sv"]["block_rate"], layer=l["path"])
+            if l.get("drift_max_abs") is not None:
+                g_drift.set(l["drift_max_abs"], layer=l["path"])
+        except ValueError:
+            dropped += 1
+    registry_.gauge(
+        "quant_layers_dropped",
+        "Audited layers past the per-layer gauge cardinality guard").set(dropped)
+    roll = report["rollups"]
+    sq = registry_.gauge("quant_model_sqnr_db",
+                         "Model-level SQNR rollup (dB)", labels=("stat",))
+    if roll["min_sqnr_db"] is not None:
+        sq.set(roll["min_sqnr_db"], stat="min")
+        sq.set(roll["mean_sqnr_db"], stat="mean")
+    if roll["sv_block_rate"] is not None:
+        registry_.gauge("quant_model_sv_block_rate",
+                        "Whole-model SV-remap block rate").set(roll["sv_block_rate"])
+    if roll["max_drift"] is not None:
+        registry_.gauge("quant_model_drift_max",
+                        "Worst packed-vs-fakequant drift").set(roll["max_drift"])
+    registry_.gauge("quant_model_wire_bytes",
+                    "Packed wire bytes across audited layers").set(roll["wire_bytes"])
+    layers_g = registry_.gauge("quant_model_layers",
+                               "Audited vs dense layer counts", labels=("state",))
+    layers_g.set(roll["layers_audited"], state="audited")
+    layers_g.set(roll["layers_dense"], state="dense")
+
+
+# ---------------------------------------------------------------------------
+# live-serving KV sampling hook (KVPagePool.write_prefill)
+# ---------------------------------------------------------------------------
+class KVAuditor:
+    """Samples KV quantization error at ``KVPagePool.write_prefill`` time.
+
+    Off by default: the pool's hook slot is ``None`` and the write path pays
+    one ``is not None`` check (the NULL-object pattern the tracer uses).
+    Attached (``pool.set_kv_audit(auditor)`` / ``Engine.serve(kv_audit=...)``)
+    it re-quantizes the prefill's bf16 K/V out-of-band with
+    ``kv_quantize``/``kv_dequantize`` and records per-page error — it never
+    touches the pool buffers, so serve outputs are bit-identical with the
+    hook on or off.
+
+    ``sample_every`` thins the hook to every Nth prefill (deterministic
+    counter, not random); ``max_pages`` bounds the per-page record list
+    (aggregates keep accumulating past it); ``group`` picks the audited
+    layer group (0: the first scan group — KV statistics are homogeneous
+    across groups and auditing one keeps the hook cheap).
+    """
+
+    def __init__(self, sample_every: int = 1, max_pages: int = 256,
+                 group: int = 0):
+        if sample_every < 1:
+            raise ValueError(f"sample_every must be >= 1, got {sample_every}")
+        self.sample_every = int(sample_every)
+        self.max_pages = int(max_pages)
+        self.group = int(group)
+        self.calls = 0
+        self.pages_sampled = 0
+        self.tokens_sampled = 0
+        self.pages_dropped = 0
+        self.pages: List[Dict[str, Any]] = []
+        self._sum_sq_ref = 0.0
+        self._sum_sq_err = 0.0
+        self._max_abs_err = 0.0
+
+    # -- the hook ------------------------------------------------------------
+    def observe_prefill(self, seq_id: int, caches, length: int, start: int,
+                        page_size: int) -> None:
+        """Record per-page KV quantization error for one prefill write.
+
+        ``caches`` is the engine prefill output ``write_prefill`` received
+        (read-only here); positions ``[start, length)`` are valid, and cache
+        index ``j`` holds token ``start + j`` on logical page
+        ``(start + j) // page_size``.
+        """
+        self.calls += 1
+        if (self.calls - 1) % self.sample_every:
+            return
+        from repro.serving.kvcache import kv_dequantize, kv_quantize
+
+        g = caches[self.group]
+        kv = jnp.stack([g["k"][:, 0], g["v"][:, 0]])  # (2, count, S, kvh, hd)
+        hd = kv.shape[-1]
+        codes, meta = kv_quantize(kv)
+        err = _np(kv_dequantize(codes, meta, hd) - kv.astype(jnp.float32))
+        ref = _np(kv).astype(np.float64)
+        err = err.astype(np.float64)
+        pos = start + np.arange(kv.shape[2])
+        valid = pos < length
+        for page in np.unique(pos[valid] // page_size):
+            mask = valid & (pos // page_size == page)
+            e, r = err[:, :, mask], ref[:, :, mask]
+            sum_sq_ref = float((r ** 2).sum())
+            sum_sq_err = float((e ** 2).sum())
+            max_abs = float(np.abs(e).max())
+            self.pages_sampled += 1
+            self.tokens_sampled += int(mask.sum())
+            self._sum_sq_ref += sum_sq_ref
+            self._sum_sq_err += sum_sq_err
+            self._max_abs_err = max(self._max_abs_err, max_abs)
+            rec = {
+                "seq": int(seq_id),
+                "page": int(page),
+                "tokens": int(mask.sum()),
+                "sqnr_db": _round(_sqnr_db(sum_sq_ref, sum_sq_err)),
+                "max_abs_err": _round(max_abs),
+            }
+            if len(self.pages) < self.max_pages:
+                self.pages.append(rec)
+            else:
+                self.pages_dropped += 1
+
+    # -- results -------------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-able aggregate + the bounded per-page records (the report's
+        ``kv`` section)."""
+        return {
+            "prefills_seen": self.calls,
+            "sample_every": self.sample_every,
+            "pages_sampled": self.pages_sampled,
+            "tokens_sampled": self.tokens_sampled,
+            "sqnr_db": _round(_sqnr_db(self._sum_sq_ref, self._sum_sq_err)),
+            "max_abs_err": _round(self._max_abs_err),
+            "pages": list(self.pages),
+            "pages_dropped": self.pages_dropped,
+        }
+
+    def install(self, registry_, stage: str = "engine") -> None:
+        """Function-backed gauges into a ``MetricsRegistry`` (read at
+        collection time; the hook itself never touches the registry)."""
+        pages = registry_.gauge("kv_audit_pages", "KV pages sampled for "
+                                "quantization error", labels=("stage",))
+        pages.set_function(lambda: self.pages_sampled, stage=stage)
+        sqnr = registry_.gauge("kv_audit_sqnr_db",
+                               "Aggregate KV quantization SQNR (dB)",
+                               labels=("stage",))
+        sqnr.set_function(
+            lambda: _sqnr_db(self._sum_sq_ref, self._sum_sq_err) or 0.0,
+            stage=stage)
+        mx = registry_.gauge("kv_audit_max_abs_err",
+                             "Worst sampled KV quantization error",
+                             labels=("stage",))
+        mx.set_function(lambda: self._max_abs_err, stage=stage)
+
+
+# ---------------------------------------------------------------------------
+# report JSON schema + minimal validator (no external jsonschema dependency)
+# ---------------------------------------------------------------------------
+REPORT_SCHEMA: Dict[str, Any] = {
+    "type": "object",
+    "required": ["schema", "model", "policy", "layers", "rollups", "kv"],
+    "properties": {
+        "schema": {"type": "string", "enum": [REPORT_SCHEMA_VERSION]},
+        "model": {"type": ["string", "null"]},
+        "policy": {
+            "type": "object",
+            "required": ["weight_format", "mode", "block_size"],
+            "properties": {
+                "weight_format": {"type": ["string", "null"]},
+                "mode": {"type": "string",
+                         "enum": ["bf16", "fakequant", "packed"]},
+                "block_size": {"type": "integer"},
+            },
+        },
+        "layers": {
+            "type": "array",
+            "items": {
+                "type": "object",
+                "required": ["path", "format", "mode", "shape", "params",
+                             "n_blocks"],
+                "properties": {
+                    "path": {"type": "string"},
+                    "format": {"type": "string"},
+                    "mode": {"type": "string", "enum": ["packed", "fakequant"]},
+                    "shape": {"type": "array", "items": {"type": "integer"}},
+                    "params": {"type": "integer"},
+                    "entries": {"type": "integer"},
+                    "n_blocks": {"type": "integer"},
+                    "wire_bytes": {"type": "integer"},
+                    "code_hist": {"type": "array", "items": {"type": "integer"}},
+                    "sqnr_db": {"type": ["number", "null"]},
+                    "mse": {"type": ["number", "null"]},
+                    "max_abs_err": {"type": ["number", "null"]},
+                    "drift_max_abs": {"type": ["number", "null"]},
+                    "sv": {"type": ["object", "null"]},
+                    "scale": {"type": ["object", "null"]},
+                },
+            },
+        },
+        "rollups": {
+            "type": "object",
+            "required": ["layers_audited", "layers_dense", "params_total",
+                         "params_quantized", "blocks_total", "sv_block_rate",
+                         "min_sqnr_db", "max_drift"],
+        },
+        "kv": {"type": ["object", "null"]},
+    },
+}
+
+_TYPES = {
+    "object": dict,
+    "array": list,
+    "string": str,
+    "integer": int,
+    "boolean": bool,
+    "null": type(None),
+}
+
+
+def _type_ok(value, t: str) -> bool:
+    if t == "number":
+        return isinstance(value, (int, float)) and not isinstance(value, bool)
+    if t == "integer":
+        return isinstance(value, int) and not isinstance(value, bool)
+    return isinstance(value, _TYPES[t])
+
+
+def _validate(value, schema: Dict[str, Any], where: str,
+              out: List[str]) -> None:
+    types = schema.get("type")
+    if types is not None:
+        allowed = types if isinstance(types, list) else [types]
+        if not any(_type_ok(value, t) for t in allowed):
+            out.append(f"{where}: expected {'|'.join(allowed)}, "
+                       f"got {type(value).__name__}")
+            return
+    if "enum" in schema and value not in schema["enum"]:
+        out.append(f"{where}: {value!r} not in {schema['enum']}")
+    if isinstance(value, dict):
+        for req in schema.get("required", ()):
+            if req not in value:
+                out.append(f"{where}: missing required key {req!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in value:
+                _validate(value[key], sub, f"{where}.{key}", out)
+    if isinstance(value, list) and "items" in schema:
+        for i, item in enumerate(value):
+            _validate(item, schema["items"], f"{where}[{i}]", out)
+
+
+def validate_report(doc: Any) -> List[str]:
+    """Violations of ``REPORT_SCHEMA`` (empty list = valid)."""
+    out: List[str] = []
+    _validate(doc, REPORT_SCHEMA, "$", out)
+    return out

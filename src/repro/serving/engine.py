@@ -177,6 +177,19 @@ class Engine:
         # params are reused across serve() calls)
         self._spec_cache: Dict[Any, Any] = {}
 
+    def quant_audit(self, *, model: Optional[str] = None, metrics=None,
+                    trace=None, kv_audit=None):
+        """Per-layer quantization audit of this engine's weights: the
+        ``obs.numerics.audit_model`` report over the raw bf16 reference tree
+        and (in packed mode) the exact wire-format tree the engine serves
+        from.  See docs/observability.md#numerics-audit."""
+        from repro.obs.numerics import audit_model
+
+        packed = self.params if self.policy.mode == "packed" else None
+        return audit_model(self._raw_params, self.policy, packed=packed,
+                           model=model, metrics=metrics, tracer=trace,
+                           kv_audit=kv_audit)
+
     # -- internals ----------------------------------------------------------
     def _decode_step(self, params, token, caches, cur_len, enc):
         with sharding_ctx(self.mesh):
@@ -416,7 +429,7 @@ class Engine:
     def serve(self, requests, *, sched_cfg=None, pool_cfg=None,
               max_new_tokens: Optional[int] = None, prefix_cache: bool = True,
               speculate_k: int = 0, draft_policy=None,
-              clock=None, trace=None, metrics=None,
+              clock=None, trace=None, metrics=None, kv_audit=None,
               profile_dir: Optional[str] = None):
         """Continuous batching: serve a stream of requests over the paged
         RaZeR-quantized KV pool, decoding a dynamic batch each iteration.
@@ -458,6 +471,9 @@ class Engine:
           * ``metrics`` -- an ``obs.MetricsRegistry``; pool/cache occupancy
             export as function-backed gauges, and TTFT / latency / per-token
             latency / step-duration histograms populate as requests finish.
+          * ``kv_audit`` -- an ``obs.KVAuditor``; samples KV quantization
+            error per page at prefill-write time (read-only: greedy outputs
+            are bit-identical with the hook on or off).
           * ``profile_dir`` -- bracket the serve loop with
             ``jax.profiler.start_trace/stop_trace`` for kernel deep dives.
 
@@ -486,6 +502,8 @@ class Engine:
                 num_pages=sched_cfg.max_slots * pages_per_seq,
                 page_size=ps, max_len=self.scfg.max_len)
         pool = KVPagePool(self.cfg, pool_cfg)
+        if kv_audit is not None:
+            pool.set_kv_audit(kv_audit)
         cache = PrefixCache(pool) if prefix_cache else None
         clock = clock if clock is not None else Clock()
         tracer = trace if trace is not None else NULL_TRACER

@@ -205,6 +205,15 @@ class KVPagePool:
         # A list (not a single callable): the engine's metrics wiring and a
         # test probe can both subscribe without displacing each other.
         self._listeners: List = []
+        # optional numerics-audit hook (obs/numerics.KVAuditor): read-only
+        # observer of prefill K/V, NULL-style no-op when None (the default)
+        self._kv_audit = None
+
+    def set_kv_audit(self, auditor) -> None:
+        """Attach a ``KVAuditor`` (or None to detach).  The auditor only
+        reads the bf16 prefill caches out-of-band -- pool contents and serve
+        outputs are bit-identical with or without it."""
+        self._kv_audit = auditor
 
     def add_listener(self, fn) -> None:
         """Subscribe ``fn(event, n_pages)`` to allocator events."""
@@ -465,6 +474,8 @@ class KVPagePool:
         for gi, c in enumerate(self.caches):
             self.caches[gi] = _quantize_scatter(
                 c, caches[gi]["k"][:, 0], caches[gi]["v"][:, 0], pids, sids)
+        if self._kv_audit is not None:
+            self._kv_audit.observe_prefill(seq_id, caches, length, start, ps)
 
     # -- wire-format page transfer (serving/disagg) --------------------------
     def export_pages(self, seq_id: Optional[int] = None, *,

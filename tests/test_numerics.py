@@ -1,0 +1,470 @@
+"""Numerics observability: hand-computed micro-tensor audits (SQNR / code
+histogram / SV-hit-rate pinned exactly), packed-vs-fakequant drift across
+every registered format, the KV sampling hook's bit-identity, the golden
+report JSON, metrics/trace export, and the check_bench trajectory gate."""
+import importlib.util
+import json
+import math
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.packing import (pack_stacked_weights, pack_weight,
+                                unpack_scale_meta_fields)
+from repro.core.policy import QuantPolicy
+from repro.core.registry import format_names, get_format
+from repro.models import transformer as tf
+from repro.obs import KVAuditor, MetricsRegistry, Tracer
+from repro.obs.numerics import (audit_model, generic_audit, razer_audit,
+                                install_numerics_metrics, validate_report)
+from repro.serving.engine import Engine, ServeConfig
+from repro.serving.scheduler import Request
+
+REPO = Path(__file__).resolve().parents[1]
+GOLDEN = Path(__file__).parent / "data" / "quant_report_golden.json"
+
+# ---------------------------------------------------------------------------
+# hand-computed fixture: two 16-element blocks with exactly derivable wire
+# bytes.  Block A is exactly representable under scale 1 with SV +5 (the
+# value 5 is NOT on the FP4 grid {0,.5,1,1.5,2,3,4,6} -- only the remapped
+# -0 code reaches it).  Block B swaps the 5 for 5.25: best config is still
+# SV +5, leaving a single error of exactly -0.25.
+# ---------------------------------------------------------------------------
+_BLOCK_A = [0, 1, 2, 3, 4, 6, -1, -2, -3, -4, -6, 0.5, 1.5, -0.5, -1.5, 5.0]
+_BLOCK_B = _BLOCK_A[:-1] + [5.25]
+# signal power, by hand: sum of squares of each list
+_SS_A = 162.0
+_SS_B = 164.5625
+_ERR_SQ_B = 0.0625  # the single -0.25 error
+
+
+def _micro_w():
+    """(16, 2): column 0 = block A (exact), column 1 = block B (one error)."""
+    return jnp.stack([jnp.asarray(_BLOCK_A, jnp.float32),
+                      jnp.asarray(_BLOCK_B, jnp.float32)], axis=1)
+
+
+def _wide_w():
+    """(16, 16): 8 A-columns and 8 B-columns -- big enough for the model
+    walk's eligibility floor, still exactly hand-computable."""
+    cols = [jnp.asarray(_BLOCK_A if i % 2 == 0 else _BLOCK_B, jnp.float32)
+            for i in range(16)]
+    return jnp.stack(cols, axis=1)
+
+
+def _spec():
+    return QuantPolicy.packed("razer").weight
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "tools" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# razer wire-byte audit: every stat pinned by hand
+# ---------------------------------------------------------------------------
+def test_razer_audit_micro_exact_block():
+    """Block A alone round-trips exactly: the audit must report zero error
+    (SQNR None), a full 16-code histogram, and one SV hit via code 8."""
+    w = jnp.asarray(_BLOCK_A, jnp.float32)[:, None]
+    stats = razer_audit(pack_weight(w), w, _spec())
+    assert stats["code_hist"] == [1] * 16  # every FP4 code used exactly once
+    assert stats["sv"] == {
+        "blocks": 1, "block_rate": 1.0, "elements": 1,
+        "element_rate": 0.0625, "select_hist": [1, 0, 0, 0],
+        "magnitudes": [5.0, 8.0]}
+    assert stats["sqnr_db"] is None and stats["mse"] == 0.0
+    assert stats["max_abs_err"] == 0.0
+    assert stats["drift_max_abs"] == 0.0
+    assert stats["n_blocks"] == 1
+    assert stats["wire_bytes"] == 8 + 1 + 4  # codes + meta + tensor_scale
+
+
+def test_razer_audit_micro_pinned_sqnr():
+    """A+B together: one 0.25 error against hand-summed signal power."""
+    w = _micro_w()
+    stats = razer_audit(pack_weight(w), w, _spec())
+    want_sqnr = 10 * math.log10((_SS_A + _SS_B) / _ERR_SQ_B)
+    assert stats["sqnr_db"] == pytest.approx(want_sqnr, abs=1e-6)
+    assert stats["sqnr_db"] == 37.1808629  # 9-sig-digit rounded, byte-stable
+    assert stats["mse"] == _ERR_SQ_B / 32
+    assert stats["max_abs_err"] == 0.25
+    assert stats["drift_max_abs"] == 0.0
+    assert stats["n_blocks"] == 2
+    assert stats["sv"]["blocks"] == 2 and stats["sv"]["elements"] == 2
+    assert stats["sv"]["select_hist"] == [2, 0, 0, 0]
+    assert stats["code_hist"] == [2] * 16
+    assert stats["scale"]["underflow_blocks"] == 0
+
+
+def test_razer_audit_stacked_bank_entries():
+    """A PackedStackedTensor audits per expert entry with identical stats."""
+    w = _micro_w()
+    bank = jnp.stack([w, w])  # E=2 identical experts
+    stats = razer_audit(pack_stacked_weights(bank), bank, _spec())
+    assert stats["entries"] == 2 and stats["n_blocks"] == 4
+    assert stats["sv"]["elements"] == 4
+    assert stats["drift_max_abs"] == 0.0
+    assert stats["max_abs_err"] == 0.25
+    # doubling identical signal and noise leaves SQNR unchanged
+    assert stats["sqnr_db"] == 37.1808629
+
+
+def test_razer_audit_without_reference_is_telemetry_only():
+    w = _micro_w()
+    stats = razer_audit(pack_weight(w), None, _spec())
+    assert "sqnr_db" not in stats and "drift_max_abs" not in stats
+    assert stats["code_hist"] == [2] * 16  # wire telemetry still present
+
+
+def test_unpack_scale_meta_fields_bit_layout():
+    """Raw-field unpack agrees with the documented byte layout."""
+    bytes_ = jnp.arange(256, dtype=jnp.uint8)
+    code, sel, sign = unpack_scale_meta_fields(bytes_, weight=True)
+    assert np.array_equal(np.asarray(code), np.arange(256) & 0x3F)
+    assert np.array_equal(np.asarray(sel), (np.arange(256) >> 7) & 1)
+    assert np.array_equal(np.asarray(sign), (np.arange(256) >> 6) & 1)
+    code, sel, sign = unpack_scale_meta_fields(bytes_, weight=False)
+    assert np.array_equal(np.asarray(code), np.arange(256) & 0x7F)
+    assert np.array_equal(np.asarray(sel), np.zeros(256))
+    assert np.array_equal(np.asarray(sign), np.arange(256) >> 7)
+
+
+# ---------------------------------------------------------------------------
+# drift: the PR-1 registry invariant, every registered format
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt", format_names())
+def test_fakequant_drift_zero_for_every_format(fmt):
+    """Two registry dispatches of the same tensor produce identical numbers."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (64, 8), jnp.float32)
+    spec = QuantPolicy.fakequant(fmt).weight
+    stats = generic_audit(w, w, spec, axis=0)
+    assert stats["drift_max_abs"] == 0.0
+    assert stats["sqnr_db"] is not None and stats["sqnr_db"] > 0
+
+
+def test_packed_vs_fakequant_drift_exactly_zero_for_razer():
+    """The wire decode and razer_qdq through the registry are the SAME
+    numbers -- drift is exactly 0, not approximately."""
+    w = jax.random.normal(jax.random.PRNGKey(4), (128, 32), jnp.bfloat16)
+    stats = razer_audit(pack_weight(jnp.asarray(w, jnp.float32)),
+                        w, _spec())
+    assert stats["drift_max_abs"] == 0.0
+
+
+def test_generic_audit_reports_sv_for_razer_and_not_for_baselines():
+    w = jax.random.normal(jax.random.PRNGKey(5), (64, 8), jnp.float32)
+    assert "sv" in generic_audit(w, w, QuantPolicy.fakequant("razer").weight)
+    assert "sv" not in generic_audit(w, w, QuantPolicy.fakequant("mxfp4").weight)
+
+
+def test_registry_audit_fn_dispatch():
+    """razer registers an audit_fn; the baselines fall back to generic."""
+    assert get_format("razer").audit_fn is not None
+    for fmt in format_names():
+        if fmt != "razer":
+            assert get_format(fmt).audit_fn is None
+
+
+# ---------------------------------------------------------------------------
+# whole-model audit + golden report
+# ---------------------------------------------------------------------------
+def _golden_params():
+    w = _wide_w()
+    return {
+        "embed": {"w": jnp.zeros((4, 4), jnp.float32)},  # dense by rule
+        "blk": {"attn": {"wq": w}},
+        "mlp": {"experts": {"w_in": jnp.stack([w, w])}},
+    }
+
+
+def _golden_report():
+    return audit_model(_golden_params(), QuantPolicy.packed("razer"),
+                       model="micro")
+
+
+def test_audit_model_walk_and_rollups():
+    rep = _golden_report()
+    assert [l["path"] for l in rep["layers"]] == [
+        "blk/attn/wq", "mlp/experts/w_in"]
+    assert rep["layers"][0]["container"] == "PackedRazerWeight"
+    assert rep["layers"][1]["container"] == "PackedStackedTensor"
+    roll = rep["rollups"]
+    assert roll["layers_dense"] == 1 and roll["layers_audited"] == 2
+    assert roll["params_total"] == 16 + 256 + 512
+    assert roll["params_quantized"] == 256 + 512
+    assert roll["max_drift"] == 0.0
+    assert roll["min_sqnr_db"] == 37.1808629
+    assert roll["sv_block_rate"] == 1.0
+    assert validate_report(rep) == []
+
+
+def test_report_golden_json_byte_stable():
+    """The serialized report is byte-identical to the committed golden."""
+    got = json.dumps(_golden_report(), indent=1, sort_keys=True) + "\n"
+    assert got == GOLDEN.read_text()
+
+
+def test_validate_report_catches_violations():
+    rep = _golden_report()
+    rep["schema"] = "bogus/v0"
+    del rep["rollups"]
+    rep["layers"][0]["mode"] = "quantum"
+    bad = validate_report(rep)
+    assert any("bogus" in b for b in bad)
+    assert any("rollups" in b for b in bad)
+    assert any("quantum" in b for b in bad)
+    assert validate_report([]) != []  # wrong top-level type
+
+
+# ---------------------------------------------------------------------------
+# metrics + trace sinks
+# ---------------------------------------------------------------------------
+def test_audit_metrics_export_and_rollups():
+    reg = MetricsRegistry()
+    rep = audit_model(_golden_params(), QuantPolicy.packed("razer"),
+                      metrics=reg)
+    snap = reg.snapshot()
+    series = {tuple(s["labels"].items()): s["value"]
+              for s in snap["quant_layer_sqnr_db"]["series"]}
+    assert series[(("layer", "blk/attn/wq"),)] == 37.1808629
+    assert snap["quant_model_drift_max"]["series"][0]["value"] == 0.0
+    assert snap["quant_model_sv_block_rate"]["series"][0]["value"] == 1.0
+    assert snap["quant_layers_dropped"]["series"][0]["value"] == 0
+    states = {tuple(s["labels"].items()): s["value"]
+              for s in snap["quant_model_layers"]["series"]}
+    assert states[(("state", "audited"),)] == 2
+    del rep
+
+
+def test_audit_metrics_cardinality_guard_drops_not_raises():
+    reg = MetricsRegistry()
+    rep = _golden_report()
+    # fabricate many layers: the per-layer gauges must saturate gracefully
+    layer = rep["layers"][0]
+    rep["layers"] = [dict(layer, path=f"l{i}") for i in range(8)]
+    install_numerics_metrics(reg, rep, max_layers=3)
+    snap = reg.snapshot()
+    assert snap["quant_layers_dropped"]["series"][0]["value"] == 5
+    assert len(snap["quant_layer_sqnr_db"]["series"]) == 3
+
+
+def test_audit_trace_instants():
+    tr = Tracer()
+    audit_model(_golden_params(), QuantPolicy.packed("razer"), tracer=tr)
+    instants = [e for e in tr.to_json()["traceEvents"]
+                if e.get("ph") == "i" and e["name"] == "quant_audit"]
+    assert len(instants) == 2
+    assert {e["args"]["layer"] for e in instants} == {
+        "blk/attn/wq", "mlp/experts/w_in"}
+
+
+# ---------------------------------------------------------------------------
+# KV sampling hook: bit-identity + snapshot
+# ---------------------------------------------------------------------------
+def _engine():
+    cfg = get_config("llama3_2_3b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    return Engine(params, cfg, ServeConfig(max_len=64, max_new_tokens=4)), cfg
+
+
+def _reqs():
+    return [Request(rid=i, prompt=[5 + i, 6, 7, 8], max_new_tokens=4,
+                    arrival=0.0) for i in range(2)]
+
+
+def test_kv_audit_hook_bit_identical_on_off():
+    eng, _ = _engine()
+    base = eng.serve(_reqs())
+    auditor = KVAuditor(sample_every=1)
+    audited = eng.serve(_reqs(), kv_audit=auditor)
+    assert [r.out_tokens for r in base.requests] == \
+        [r.out_tokens for r in audited.requests]
+    assert auditor.pages_sampled > 0
+    snap = auditor.snapshot()
+    assert snap["prefills_seen"] == 2
+    assert snap["sqnr_db"] is not None and snap["sqnr_db"] > 0
+    assert snap["tokens_sampled"] == 8  # two 4-token prompts
+    assert validate_report({**_golden_report(), "kv": snap}) == []
+
+
+def test_kv_audit_sampling_and_bounds():
+    eng, _ = _engine()
+    every_other = KVAuditor(sample_every=2, max_pages=1)
+    eng.serve(_reqs(), kv_audit=every_other)
+    assert every_other.calls == 2
+    assert every_other.pages_sampled == 1  # only the first prefill sampled
+    assert len(every_other.pages) == 1
+    with pytest.raises(ValueError, match="sample_every"):
+        KVAuditor(sample_every=0)
+
+
+def test_kv_audit_metrics_install():
+    eng, _ = _engine()
+    reg = MetricsRegistry()
+    auditor = KVAuditor()
+    auditor.install(reg, stage="engine")
+    eng.serve(_reqs(), kv_audit=auditor)
+    snap = reg.snapshot()
+    assert snap["kv_audit_pages"]["series"][0]["value"] == \
+        auditor.pages_sampled > 0
+    assert snap["kv_audit_sqnr_db"]["series"][0]["value"] > 0
+
+
+def test_engine_quant_audit_packed():
+    cfg = get_config("llama3_2_3b").reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(max_len=64, max_new_tokens=4,
+                                          quant=QuantPolicy.packed()))
+    rep = eng.quant_audit(model="llama3_2_3b")
+    assert rep["rollups"]["layers_audited"] > 0
+    assert rep["rollups"]["max_drift"] == 0.0
+    # every remapped layer actually uses the SV codepoint
+    assert all(l["sv"]["block_rate"] > 0 for l in rep["layers"])
+    assert validate_report(rep) == []
+
+
+# ---------------------------------------------------------------------------
+# launch fail-fast
+# ---------------------------------------------------------------------------
+def test_serve_quant_report_fails_fast_without_packed(tmp_path):
+    from repro.launch import serve as launch_serve
+
+    with pytest.raises(SystemExit):
+        launch_serve.main(["--arch", "llama3_2_3b", "--dry",
+                           "--quant-report", str(tmp_path / "r.json")])
+    with pytest.raises(SystemExit):  # --kv-audit needs --continuous
+        launch_serve.main(["--arch", "llama3_2_3b", "--dry", "--packed",
+                           "--quant-report", str(tmp_path / "r.json"),
+                           "--kv-audit", "1"])
+
+
+# ---------------------------------------------------------------------------
+# check_bench: the trajectory gate
+# ---------------------------------------------------------------------------
+def test_check_bench_parse_detail():
+    cb = _load_tool("check_bench")
+    assert cb.parse_detail("tok_s=37.41 speedup=7.95x bound=mem n=4") == {
+        "tok_s": 37.41, "speedup": 7.95, "n": 4.0}
+
+
+def test_check_bench_committed_baselines_pass(capsys):
+    cb = _load_tool("check_bench")
+    assert cb.main([]) == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_check_bench_fails_on_injected_regression(tmp_path, capsys):
+    """Tamper a BENCH metric beyond tolerance: the gate must fail."""
+    cb = _load_tool("check_bench")
+    bench_dir = tmp_path / "benches"
+    bench_dir.mkdir()
+    for f in REPO.glob("BENCH_pr*.json"):
+        shutil.copy(f, bench_dir / f.name)
+    baseline = tmp_path / "baselines.json"
+    shutil.copy(REPO / "benchmarks" / "bench_baselines.json", baseline)
+    assert cb.main(["--baseline", str(baseline),
+                    "--bench-dir", str(bench_dir)]) == 0
+
+    doc = json.loads((bench_dir / "BENCH_pr3.json").read_text())
+    # regress a structural metric (tight tolerance): a silently doubled
+    # per-device expert bank would mean the sharding stopped sharding
+    bench = doc["benches"]["sharded_grouped_moe"]
+    bench[0][2] = bench[0][2].replace("per_dev_bank_mib=1701.0",
+                                      "per_dev_bank_mib=3402.0")
+    (bench_dir / "BENCH_pr3.json").write_text(json.dumps(doc))
+    assert cb.main(["--baseline", str(baseline),
+                    "--bench-dir", str(bench_dir)]) == 1
+    assert "per_dev_bank_mib" in capsys.readouterr().out
+
+
+def test_check_bench_flags_vanished_rows(tmp_path):
+    cb = _load_tool("check_bench")
+    bench_dir = tmp_path / "benches"
+    bench_dir.mkdir()
+    for f in REPO.glob("BENCH_pr*.json"):
+        shutil.copy(f, bench_dir / f.name)
+    doc = json.loads((bench_dir / "BENCH_pr4.json").read_text())
+    doc["benches"]["serving_throughput"] = doc["benches"]["serving_throughput"][1:]
+    (bench_dir / "BENCH_pr4.json").write_text(json.dumps(doc))
+    rc = cb.main(["--baseline",
+                  str(REPO / "benchmarks" / "bench_baselines.json"),
+                  "--bench-dir", str(bench_dir)])
+    assert rc == 1
+
+
+def test_check_bench_report_gates(tmp_path, capsys):
+    """The committed gates pass a real report and fail a doctored one."""
+    cb = _load_tool("check_bench")
+    rep = _golden_report()
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(rep))
+    assert cb.main(["--report", str(good)]) == 0
+
+    rep["rollups"]["max_drift"] = 0.5          # broken registry invariant
+    rep["layers"][0]["sv"]["block_rate"] = 0.0  # SV remap never fires
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(rep))
+    assert cb.main(["--report", str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "max_drift" in out and "block_rate" in out
+
+
+def test_check_bench_resolve_path_wildcard():
+    cb = _load_tool("check_bench")
+    doc = {"layers": [{"sv": {"rate": 0.5}}, {"sv": None}], "top": 1}
+    got = cb.resolve_path(doc, "layers[*].sv.rate")
+    assert got == [("layers[0].sv.rate", 0.5), ("layers[1].sv.rate", None)]
+    assert cb.resolve_path(doc, "top") == [("top", 1)]
+    assert cb.resolve_path(doc, "missing.deep") == [("missing.deep", None)]
+
+
+def test_check_bench_write_baseline_roundtrip(tmp_path):
+    cb = _load_tool("check_bench")
+    baseline = tmp_path / "b.json"
+    baseline.write_text(json.dumps({
+        "schema": cb.BASELINE_SCHEMA, "default_rel_tol": 0.1,
+        "metric_tolerances": {"us": 9.0}, "report_gates": {"x": {"min": 1}},
+        "files": {}}))
+    cfg = cb.write_baseline(baseline, REPO)
+    # regeneration rebuilds rows but preserves hand-maintained knobs
+    assert cfg["metric_tolerances"] == {"us": 9.0}
+    assert cfg["report_gates"] == {"x": {"min": 1}}
+    assert cfg["files"] and all(v for v in cfg["files"].values())
+    assert cb.main(["--baseline", str(baseline), "--bench-dir", str(REPO)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# quant_report CLI
+# ---------------------------------------------------------------------------
+def test_quant_report_cli_writes_valid_gated_report(tmp_path, capsys):
+    qr = _load_tool("quant_report")
+    cb = _load_tool("check_bench")
+    out = tmp_path / "report.json"
+    assert qr.main(["--arch", "llama3_2_3b", "--dry", "--out", str(out)]) == 0
+    capsys.readouterr()
+    doc = json.loads(out.read_text())
+    assert validate_report(doc) == []
+    assert doc["rollups"]["max_drift"] == 0.0
+    assert all(l["sv"]["block_rate"] > 0 for l in doc["layers"])
+    assert cb.main(["--report", str(out)]) == 0
+    # byte-stable: a second run serializes identically
+    out2 = tmp_path / "report2.json"
+    assert qr.main(["--arch", "llama3_2_3b", "--dry", "--out", str(out2)]) == 0
+    assert out.read_bytes() == out2.read_bytes()
+
+
+def test_quant_report_cli_rejects_unpackable_mode(capsys):
+    qr = _load_tool("quant_report")
+    with pytest.raises(SystemExit):
+        qr.main(["--arch", "llama3_2_3b", "--dry", "--format", "mxfp4",
+                 "--mode", "packed"])

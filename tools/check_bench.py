@@ -1,0 +1,221 @@
+#!/usr/bin/env python3
+"""Trajectory gate: diff BENCH_pr*.json snapshots and quant-audit reports
+against committed baselines.
+
+    python tools/check_bench.py                          # gate BENCH files
+    python tools/check_bench.py --report report.json     # + gate a quant report
+    python tools/check_bench.py --write-baseline         # regenerate baselines
+
+The committed ``BENCH_pr*.json`` files are the repo's perf trajectory; the
+quant report (tools/quant_report.py) is its accuracy trajectory.  Neither
+had a gate: a PR could silently regress a derived metric (speedup, accept
+rate, SV hit rate, drift) by regenerating a snapshot, and review would have
+to eyeball float soup to notice.  This tool pins both against
+``benchmarks/bench_baselines.json``:
+
+* every ``<bench>/<label>`` row in the baseline must still exist, and every
+  numeric metric (the ``us`` column plus ``key=value`` pairs parsed from the
+  detail string) must be within its tolerance -- per-metric relative
+  tolerances under ``metric_tolerances`` (timing-derived metrics get loose
+  ones; structural metrics like shard sizes and accept rates get tight
+  ones), ``default_rel_tol`` otherwise;
+* ``--report`` applies the one-sided ``report_gates`` (min/max/equals on
+  dotted paths into the report, ``layers[*]`` iterating the layer list) --
+  e.g. ``rollups.max_drift: {max: 0}`` pins the packed-vs-fakequant
+  invariant and ``layers[*].sv.block_rate: {min: ...}`` insists every
+  remapped layer actually uses the SV codepoint.
+
+Intentional perf/accuracy changes regenerate the baseline
+(``--write-baseline`` keeps hand-maintained tolerances and gates) and the
+diff shows up in review, where it can be argued about.  Stdlib-only: runs
+in any CI leg.  Exits 0 clean / 1 violations / 2 usage errors.  See
+docs/observability.md#check_bench-tolerances.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+BASELINE_SCHEMA = "bench-baselines/v1"
+_NUM = re.compile(r"^([A-Za-z_][\w.]*)=([-+]?[0-9]*\.?[0-9]+(?:[eE][-+]?[0-9]+)?)x?$")
+
+
+def parse_detail(detail: str) -> dict:
+    """``'tok_s=37.41 speedup=7.95x bound=mem'`` -> numeric metrics only
+    (a trailing ``x`` unit is tolerated, non-numeric values are skipped)."""
+    out = {}
+    for token in detail.split():
+        m = _NUM.match(token)
+        if m:
+            out[m.group(1)] = float(m.group(2))
+    return out
+
+
+def bench_metrics(path: Path) -> dict:
+    """A BENCH_pr*.json -> ``{'<bench>/<label>': {metric: value}}``."""
+    doc = json.loads(path.read_text(encoding="utf-8"))
+    rows = {}
+    for bench, entries in doc.get("benches", {}).items():
+        for label, us, detail in entries:
+            rows[f"{bench}/{label}"] = {"us": float(us), **parse_detail(detail)}
+    return rows
+
+
+def _tolerance(metric: str, cfg: dict) -> float:
+    return float(cfg.get("metric_tolerances", {}).get(
+        metric, cfg.get("default_rel_tol", 0.25)))
+
+
+def check_bench_file(path: Path, baseline_rows: dict, cfg: dict) -> list:
+    """Violations of one BENCH file against its baseline rows."""
+    try:
+        rows = bench_metrics(path)
+    except (OSError, json.JSONDecodeError, ValueError, TypeError) as e:
+        return [f"{path.name}: unreadable bench JSON: {e}"]
+    bad = []
+    for key, base in baseline_rows.items():
+        cur = rows.get(key)
+        if cur is None:
+            bad.append(f"{path.name}: baseline row {key!r} disappeared")
+            continue
+        for metric, want in base.items():
+            got = cur.get(metric)
+            if got is None:
+                bad.append(f"{path.name}: {key}: metric {metric!r} disappeared"
+                           f" (baseline {want})")
+                continue
+            tol = _tolerance(metric, cfg)
+            lim = tol * max(abs(want), 1e-12)
+            if abs(got - want) > lim:
+                bad.append(
+                    f"{path.name}: {key}: {metric} = {got} drifted from "
+                    f"baseline {want} (|Δ| {abs(got - want):.6g} > "
+                    f"rel_tol {tol} -> {lim:.6g})")
+    return bad
+
+
+def resolve_path(doc, dotted: str) -> list:
+    """Dotted-path lookup into a report; ``name[*]`` fans out over a list.
+    Returns ``[(concrete_path, value_or_None), ...]``."""
+    found = [("", doc)]
+    for part in dotted.split("."):
+        m = re.match(r"^(\w+)\[\*\]$", part)
+        nxt = []
+        for where, val in found:
+            if m:
+                items = val.get(m.group(1)) if isinstance(val, dict) else None
+                if not isinstance(items, list):
+                    nxt.append((f"{where}.{part}".lstrip("."), None))
+                    continue
+                for i, item in enumerate(items):
+                    nxt.append((f"{where}.{m.group(1)}[{i}]".lstrip("."), item))
+            else:
+                sub = val.get(part) if isinstance(val, dict) else None
+                nxt.append((f"{where}.{part}".lstrip("."), sub))
+        found = nxt
+    return found
+
+
+def check_report(doc, gates: dict, name: str = "report") -> list:
+    """Violations of a quant report against one-sided gates."""
+    bad = []
+    for dotted, gate in gates.items():
+        for where, val in resolve_path(doc, dotted):
+            label = f"{name}: {where}"
+            if val is None:
+                bad.append(f"{label}: missing (gate {gate})")
+                continue
+            if "equals" in gate and val != gate["equals"]:
+                bad.append(f"{label} = {val!r} != required {gate['equals']!r}")
+            if "min" in gate and not (isinstance(val, (int, float))
+                                      and val >= gate["min"]):
+                bad.append(f"{label} = {val!r} below min {gate['min']}")
+            if "max" in gate and not (isinstance(val, (int, float))
+                                      and val <= gate["max"]):
+                bad.append(f"{label} = {val!r} above max {gate['max']}")
+    return bad
+
+
+def write_baseline(baseline_path: Path, bench_dir: Path) -> dict:
+    """Regenerate baseline rows from the current BENCH files, preserving any
+    hand-maintained tolerances and report gates."""
+    cfg = {"schema": BASELINE_SCHEMA, "default_rel_tol": 0.25,
+           "metric_tolerances": {}, "report_gates": {}, "files": {}}
+    if baseline_path.exists():
+        old = json.loads(baseline_path.read_text(encoding="utf-8"))
+        for keep in ("default_rel_tol", "metric_tolerances", "report_gates"):
+            if keep in old:
+                cfg[keep] = old[keep]
+    for path in sorted(bench_dir.glob("BENCH_pr*.json")):
+        cfg["files"][path.name] = bench_metrics(path)
+    baseline_path.write_text(
+        json.dumps(cfg, indent=1, sort_keys=True) + "\n", encoding="utf-8")
+    return cfg
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate BENCH_pr*.json + quant reports against baselines")
+    root = Path(__file__).resolve().parent.parent
+    ap.add_argument("--baseline", type=Path,
+                    default=root / "benchmarks" / "bench_baselines.json")
+    ap.add_argument("--bench-dir", type=Path, default=root,
+                    help="directory holding the BENCH_pr*.json snapshots")
+    ap.add_argument("--report", type=Path, default=None,
+                    help="quant-report JSON to gate (tools/quant_report.py "
+                         "or launch.serve --quant-report output)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate baseline rows from the current BENCH "
+                         "files (tolerances/gates preserved)")
+    args = ap.parse_args(argv)
+
+    if args.write_baseline:
+        cfg = write_baseline(args.baseline, args.bench_dir)
+        n = sum(len(v) for v in cfg["files"].values())
+        print(f"wrote {args.baseline} ({len(cfg['files'])} files, {n} rows)")
+        return 0
+
+    try:
+        cfg = json.loads(args.baseline.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"unreadable baseline {args.baseline}: {e}")
+        return 2
+    if cfg.get("schema") != BASELINE_SCHEMA:
+        print(f"{args.baseline}: schema {cfg.get('schema')!r} != "
+              f"{BASELINE_SCHEMA!r}")
+        return 2
+
+    bad, checked = [], 0
+    for fname, rows in sorted(cfg.get("files", {}).items()):
+        path = args.bench_dir / fname
+        if not path.exists():
+            bad.append(f"{fname}: file vanished but baseline has "
+                       f"{len(rows)} rows")
+            continue
+        bad.extend(check_bench_file(path, rows, cfg))
+        checked += len(rows)
+
+    if args.report is not None:
+        try:
+            doc = json.loads(args.report.read_text(encoding="utf-8"))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"unreadable report {args.report}: {e}")
+            return 2
+        gates = cfg.get("report_gates", {})
+        bad.extend(check_report(doc, gates, name=args.report.name))
+        checked += len(gates)
+
+    if bad:
+        print("\n".join(bad))
+        print(f"\n{len(bad)} bench/report regression(s)")
+        return 1
+    print(f"OK: {checked} baseline metrics/gates hold"
+          + (f" (report: {args.report.name})" if args.report else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

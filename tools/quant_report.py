@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Emit the per-layer quantization audit for a model config.
+
+    PYTHONPATH=src python tools/quant_report.py --arch llama3_2_3b --reduced \
+        --out report.json
+
+Builds the arch's params (seeded init -- same weights the serving drivers
+use without --ckpt), resolves the quantization policy, and runs
+``repro.obs.numerics.audit_model``: per-layer SQNR/MSE/max-abs-err vs bf16,
+FP4 code-usage histograms with SV-remap hit rates, scale-code clipping/
+underflow counts, and the packed-vs-fakequant drift check (exactly 0 for
+razer by the PR-1 registry invariant).  The JSON is byte-stable
+(sorted keys, 9-significant-digit floats) and schema-versioned
+(``razer-quant-report/v1``); gate it in CI with::
+
+    python tools/check_bench.py --report report.json
+
+``--mode auto`` (default) audits the wire format when the chosen format
+packs (razer) and the fakequant path otherwise (nvfp4/mxfp4/int4/nf4/
+fouroversix self-report through the registry ``audit_fn`` hook or the
+generic BlockQuantized audit).  ``--metrics-out``/``--trace-out`` land the
+same numbers in a Prometheus/JSON metrics dump and a Perfetto timeline.
+See docs/observability.md#numerics-audit for the schema and how to read
+the SV-remap telemetry.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="per-layer quantization audit (docs/observability.md#numerics-audit)")
+    ap.add_argument("--arch", required=True, help="config name (repro.configs)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CI-sized shapes)")
+    ap.add_argument("--format", default="razer",
+                    help="registered quant format to audit (default razer)")
+    ap.add_argument("--mode", choices=("auto", "packed", "fakequant"),
+                    default="auto",
+                    help="auto = packed wire-byte audit when the format packs, "
+                         "fakequant otherwise")
+    ap.add_argument("--out", default=None, metavar="OUT.json",
+                    help="write the report JSON here (default: stdout summary only)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="also export per-layer gauges + rollups as a metrics "
+                         "snapshot (.json) or Prometheus text")
+    ap.add_argument("--trace-out", default=None,
+                    help="also drop one quant_audit instant per layer into a "
+                         "Chrome trace-event JSON")
+    ap.add_argument("--max-layer-series", type=int, default=256,
+                    help="cardinality guard for per-layer gauges")
+    ap.add_argument("--dry", action="store_true",
+                    help="CI smoke mode: force the reduced config")
+    args = ap.parse_args(argv)
+
+    if args.dry:
+        args.reduced = True
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.policy import QuantPolicy
+    from repro.core.registry import format_names, get_format
+    from repro.models import transformer as tf
+    from repro.obs.numerics import audit_model, validate_report
+
+    if args.format not in format_names():
+        ap.error(f"unknown format {args.format!r}; registered: "
+                 f"{', '.join(format_names())}")
+    packs = get_format(args.format).pack_fn is not None
+    mode = args.mode
+    if mode == "auto":
+        mode = "packed" if packs else "fakequant"
+    if mode == "packed" and not packs:
+        ap.error(f"format {args.format!r} has no packed wire format "
+                 f"(no pack_fn registered); use --mode fakequant")
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    policy = (QuantPolicy.packed(args.format) if mode == "packed"
+              else QuantPolicy.fakequant(args.format))
+
+    metrics = tracer = None
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+
+        metrics = MetricsRegistry()
+    if args.trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
+
+    report = audit_model(params, policy, model=args.arch, metrics=metrics,
+                         tracer=tracer, max_layer_series=args.max_layer_series)
+    bad = validate_report(report)
+    if bad:  # the emitter violating its own schema is a bug, not a warning
+        print("\n".join(bad))
+        print(f"\n{len(bad)} schema violation(s) in the generated report")
+        return 1
+
+    roll = report["rollups"]
+    print(f"{args.arch} [{args.format}/{mode}]: {roll['layers_audited']} "
+          f"layers audited, {roll['layers_dense']} dense "
+          f"({roll['params_quantized']}/{roll['params_total']} params quantized)")
+    for layer in report["layers"]:
+        sv = layer.get("sv") or {}
+        print(f"  {layer['path']}: sqnr {layer.get('sqnr_db')} dB, "
+              f"sv_block_rate {sv.get('block_rate')}, "
+              f"drift {layer.get('drift_max_abs')}")
+    print(f"rollups: min_sqnr {roll['min_sqnr_db']} dB (worst: "
+          f"{roll['worst_layer']}), sv_block_rate {roll['sv_block_rate']}, "
+          f"max_drift {roll['max_drift']}, wire {roll['wire_bytes']} bytes")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"report: {args.out} (gate: python tools/check_bench.py "
+              f"--report {args.out})")
+    if metrics is not None:
+        if args.metrics_out.endswith(".json"):
+            with open(args.metrics_out, "w") as f:
+                json.dump(metrics.snapshot(), f, indent=1, sort_keys=True)
+                f.write("\n")
+        else:
+            with open(args.metrics_out, "w") as f:
+                f.write(metrics.expose())
+        print(f"metrics: {args.metrics_out}")
+    if tracer is not None:
+        tracer.export(args.trace_out)
+        print(f"trace: {args.trace_out} ({len(tracer.events)} events)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
